@@ -1,0 +1,53 @@
+"""Fig. 2 — contention frontier.
+
+With N_exp expensive objects, GDSF's regret is large while B < N_exp and
+collapses to ~0 exactly at B = N_exp: once the expensive working set fits,
+greedy cost-ranking is optimal (paper: 0.23-0.69 before, 0.0002 at the
+frontier). Exact OPT reference, uniform pages.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Trace, exact_opt_uniform, regret, simulate
+from .common import emit, timed
+
+
+def run_frontier(n_exp=16, n_cheap=64, T=6000, seed=0, ratio=1e6):
+    rng = np.random.default_rng(seed)
+    N = n_exp + n_cheap
+    # expensive objects: moderately popular; cheap: very popular
+    p = np.concatenate([np.full(n_exp, 0.5 / n_exp),
+                        np.full(n_cheap, 0.5 / n_cheap)])
+    ids = rng.choice(N, size=T, p=p).astype(np.int32)
+    costs = np.concatenate([np.full(n_exp, ratio), np.full(n_cheap, 1.0)])
+    tr = Trace(ids=ids, sizes=np.ones(N))
+    out = []
+    for B in range(2, n_exp + 8):
+        opt = exact_opt_uniform(ids, costs, B).dollars
+        r = regret(simulate("gdsf", tr, costs, float(B)).dollars, opt)
+        out.append((B, r))
+    return out, n_exp
+
+
+def main():
+    (rows, n_exp), dt = timed(run_frontier, repeats=1)
+    below = [r for B, r in rows if B <= n_exp]
+    # NOTE (reproduction nuance, EXPERIMENTS.md §Claims): under the
+    # mandatory-insertion semantics of eq. (2) — the fetched object occupies
+    # a slot while served — every streaming cheap miss displaces a resident,
+    # so the collapse lands at B = N_exp + 1 (the +1 is the serving scratch
+    # slot). The paper reports the collapse "exactly at B = N_exp", i.e. a
+    # bypass-admission cache model; the phenomenon and magnitudes match.
+    frontier = dict(rows)[n_exp + 1]
+    past = [r for B, r in rows if B > n_exp + 1]
+    emit("fig2_contention_frontier", dt,
+         f"n_exp={n_exp};regret_below_med={np.median(below):.4f};"
+         f"regret_at_frontier={frontier:.6f};"
+         f"regret_past_med={np.median(past):.6f}")
+    return {"rows": rows, "n_exp": n_exp,
+            "below": float(np.median(below)), "at": float(frontier)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Exact-reference validation at benchmark scale: the paper's 250-instance
+cent-exact brute-force check (flow == state DP) plus LP integrality."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dp_opt_uniform, exact_opt_uniform, lp_opt
+from .common import emit, timed
+
+
+def run_250():
+    rng = np.random.default_rng(0)
+    worst = 0.0
+    for _ in range(250):
+        T = int(rng.integers(4, 13))
+        N = int(rng.integers(2, 6))
+        B = int(rng.integers(1, 4))
+        ids = rng.integers(0, N, T).astype(np.int32)
+        costs = rng.integers(1, 100, N).astype(float)
+        f = exact_opt_uniform(ids, costs, B).dollars
+        d = dp_opt_uniform(ids, costs, B)
+        worst = max(worst, abs(f - d))
+    return worst
+
+
+def main():
+    worst, dt = timed(run_250, repeats=1)
+    emit("exact_250_bruteforce", dt, f"worst_abs_err={worst:.2e};cent_exact={worst < 1e-6}")
+
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, 100, 2000).astype(np.int32)
+    costs = rng.lognormal(0, 2, 100)
+    (res, dt2) = timed(lambda: lp_opt(ids, costs, np.ones(100), 12.0), repeats=1)
+    x = res[2]
+    integral = bool(np.all((x < 1e-6) | (x > 1 - 1e-6)))
+    emit("lp_integrality_2k", dt2, f"integral_vertex={integral}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Exact-optimum scalability: interval LP (sparse difference form) vs the
+min-cost-flow solver, and the paper's 1e5-request scale-stability check
+(LRU regret unchanged at 5x the window)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Trace, exact_opt_uniform, lp_opt, regret, simulate
+from .common import emit, timed
+
+
+def main():
+    rng = np.random.default_rng(0)
+    N, B = 2000, 64
+
+    # solver agreement + timing at the paper's 20k window
+    ids20 = rng.integers(0, N, 20_000).astype(np.int32)
+    costs = rng.lognormal(0, 2, N)
+    (r20, dt_flow) = timed(lambda: exact_opt_uniform(ids20, costs, B),
+                           repeats=1)
+    (lp20, dt_lp) = timed(lambda: lp_opt(ids20, costs, np.ones(N), float(B)),
+                          repeats=1)
+    agree = abs(lp20[0] - r20.dollars) <= 1e-6 * max(1.0, abs(r20.dollars))
+    emit("exact_flow_20k", dt_flow, f"dollars={r20.dollars:.2f}")
+    emit("exact_lp_20k", dt_lp, f"dollars={lp20[0]:.2f};agree={agree}")
+
+    # scale stability: LRU regret at 20k vs 100k requests
+    tr20 = Trace(ids=ids20, sizes=np.ones(N))
+    lru20 = regret(simulate("lru", tr20, costs, float(B)).dollars, r20.dollars)
+
+    ids100 = rng.integers(0, N, 100_000).astype(np.int32)
+    (r100, dt100) = timed(lambda: exact_opt_uniform(ids100, costs, B),
+                          repeats=1)
+    tr100 = Trace(ids=ids100, sizes=np.ones(N))
+    lru100 = regret(simulate("lru", tr100, costs, float(B)).dollars,
+                    r100.dollars)
+    emit("exact_flow_100k", dt100,
+         f"lru_regret_20k={lru20:.4f};lru_regret_100k={lru100:.4f};"
+         f"drift={abs(lru100 - lru20):.4f}")
+    return dict(lru20=lru20, lru100=lru100)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 1 — heterogeneity-regret law.
+
+LRU's dollar-regret rises with miss-cost dispersion H (paper: Spearman
+0.87); cost-aware GDSF's median regret is ~0.13x LRU's where H >= 0.5.
+Uniform-size pages, costs assigned independently of popularity, exact OPT.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Trace, exact_opt_uniform, heterogeneity, regret,
+                        simulate)
+from .common import emit, spearman, timed
+
+
+def run_sweep(n_points=24, T=4000, N=150, B=32, seed0=100):
+    rows = []
+    for j in range(n_points):
+        rng = np.random.default_rng(seed0 + j)
+        sigma = 3.5 * j / max(1, n_points - 1)   # cost dispersion knob
+        ids = _zipf_ids(rng, N, T, alpha=1.0)
+        costs = np.exp(rng.normal(0.0, sigma, N))
+        tr = Trace(ids=ids, sizes=np.ones(N))
+        H = heterogeneity(ids, costs)
+        opt = exact_opt_uniform(ids, costs, B).dollars
+        r_lru = regret(simulate("lru", tr, costs, float(B)).dollars, opt)
+        r_gdsf = regret(simulate("gdsf", tr, costs, float(B)).dollars, opt)
+        rows.append((H, r_lru, r_gdsf))
+    return rows
+
+
+def _zipf_ids(rng, n, T, alpha):
+    p = np.arange(1, n + 1, dtype=float) ** (-alpha)
+    p /= p.sum()
+    return rng.choice(n, size=T, p=p).astype(np.int32)
+
+
+def main():
+    rows, dt = timed(run_sweep, repeats=1)
+    H = np.array([r[0] for r in rows])
+    lru = np.array([r[1] for r in rows])
+    gdsf = np.array([r[2] for r in rows])
+    rho = spearman(H, lru)
+    hi = H >= 0.5
+    ratio = (np.median(gdsf[hi]) / max(np.median(lru[hi]), 1e-12)
+             if hi.any() else float("nan"))
+    emit("fig1_heterogeneity_law", dt,
+         f"spearman_H_lru={rho:.3f};gdsf_over_lru_med@H>=0.5={ratio:.3f};"
+         f"points={len(rows)}")
+    return {"spearman": rho, "gdsf_over_lru": ratio, "rows": rows}
+
+
+if __name__ == "__main__":
+    main()

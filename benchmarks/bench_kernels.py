@@ -1,0 +1,45 @@
+"""Pallas kernels (interpret mode on CPU) vs their jnp oracles — correctness
+at benchmark scale + oracle timing. On-TPU timing requires real hardware;
+the dry-run covers the compiled path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from .common import emit, timed
+
+
+def main():
+    rng = np.random.default_rng(0)
+    T, N = 100_000, 4096
+    ids = jnp.asarray(rng.integers(0, N, T).astype(np.int32))
+
+    out_ref, dt_ref = timed(
+        lambda: np.asarray(ref.next_use_ref(ids, N)), repeats=1)
+    out_k, dt_k = timed(
+        lambda: np.asarray(ops.next_use(ids, N, block_t=4096)), repeats=1)
+    emit("kernel_next_use_100k", dt_k,
+         f"oracle_us={dt_ref*1e6:.0f};match={bool((out_ref==out_k).all())}")
+
+    scores = jnp.asarray(rng.standard_normal(65536).astype(np.float32))
+    touch = jnp.asarray(rng.integers(0, 1 << 20, 65536).astype(np.int32))
+    mask = jnp.asarray(rng.random(65536) < 0.7)
+    (gi, gv), dt_e = timed(
+        lambda: ops.evict_argmin(scores, touch, mask, block_n=8192), repeats=1)
+    wi, wv = ref.evict_argmin_ref(scores, touch, mask)
+    emit("kernel_evict_argmin_64k", dt_e,
+         f"match={int(gi)==int(wi)};victim={int(gi)}")
+
+    deltas = jnp.asarray(rng.integers(-3, 4, 100_000).astype(np.float32))
+    occ_k, dt_o = timed(
+        lambda: np.asarray(ops.interval_occupancy(deltas, block_t=8192)),
+        repeats=1)
+    occ_r = np.cumsum(np.asarray(deltas))
+    emit("kernel_interval_occupancy_100k", dt_o,
+         f"allclose={bool(np.allclose(occ_k, occ_r, rtol=1e-5, atol=1e-3))}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""JAX lax.scan policy-replay throughput vs the Python reference, plus the
+vmapped (price x budget) sweep — the TPU-native form of the paper's grids."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Trace, simulate
+from repro.core.policies_jax import simulate_jax, sweep_jax
+from .common import emit, timed
+
+
+def main():
+    rng = np.random.default_rng(0)
+    T, N, B = 20_000, 500, 64
+    ids = rng.integers(0, N, T).astype(np.int32)
+    costs = 2.0 ** rng.integers(0, 12, N).astype(np.float64)
+    tr = Trace(ids=ids, sizes=np.ones(N))
+
+    _, dt_py = timed(lambda: simulate("gdsf", tr, costs, float(B)), repeats=1)
+    _, dt_jax = timed(lambda: simulate_jax("gdsf", ids, costs, B,
+                                           num_objects=N), repeats=3)
+    emit("policy_python_20k", dt_py, f"req_per_s={T/dt_py:.0f}")
+    emit("policy_jax_scan_20k", dt_jax,
+         f"req_per_s={T/dt_jax:.0f};speedup_vs_py={dt_py/dt_jax:.2f}x")
+
+    # batched 4 price vectors x 4 budgets in one device program
+    cost_matrix = np.stack([costs * (10 ** k) for k in range(4)])
+    budgets = np.array([16, 32, 64, 128])
+    out, dt_sweep = timed(lambda: sweep_jax("gdsf", ids, cost_matrix, budgets,
+                                            num_objects=N), repeats=1)
+    cells = out.size
+    emit("policy_jax_sweep_16cells", dt_sweep,
+         f"cell_per_s={cells/dt_sweep:.2f};req_per_s={cells*T/dt_sweep:.0f}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

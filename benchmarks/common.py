@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Returns (result, seconds_per_call)."""
+    fn(*args, **kwargs)  # warm
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def spearman(x, y) -> float:
+    import numpy as np
+    rx = np.argsort(np.argsort(x)).astype(float)
+    ry = np.argsort(np.argsort(y)).astype(float)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = np.sqrt((rx ** 2).sum() * (ry ** 2).sum())
+    return float((rx * ry).sum() / denom) if denom else 0.0

@@ -1,0 +1,37 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract:
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run crossover  # one
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (bench_cdn, bench_contention, bench_costfoo, bench_crossover,
+               bench_exact, bench_flow_scale, bench_heterogeneity,
+               bench_kernels, bench_policy_throughput)
+
+ALL = {
+    "exact": bench_exact.main,                    # §2 integrality/brute force
+    "heterogeneity": bench_heterogeneity.main,    # Fig. 1
+    "contention": bench_contention.main,          # Fig. 2
+    "costfoo": bench_costfoo.main,                # §4 bracket
+    "crossover": bench_crossover.main,            # Table 1 / Fig. 3
+    "cdn": bench_cdn.main,                        # Fig. 4
+    "flow_scale": bench_flow_scale.main,          # §6 scale stability
+    "policy_throughput": bench_policy_throughput.main,  # JAX replay engine
+    "kernels": bench_kernels.main,                # Pallas vs oracle
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for n in names:
+        ALL[n]()
+
+
+if __name__ == "__main__":
+    main()

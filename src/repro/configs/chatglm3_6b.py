@@ -1,0 +1,17 @@
+"""chatglm3-6b — RoPE on half the head dim, strong GQA [arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024.
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b", family="dense",
+    num_layers=28, d_model=4096, num_heads=32, num_kv_heads=2,
+    d_ff=13696, vocab_size=65024, rope_fraction=0.5,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="chatglm3-6b-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=160, vocab_size=256, rope_fraction=0.5,
+)

@@ -1,0 +1,22 @@
+# The paper's primary contribution: an exact offline dollar-optimal
+# reference for cloud-egress caching, the cost-FOO bracket for variable
+# sizes, dollar-scored policies, and the s* = f/e crossover.
+from .pricing import (PRICE_VECTORS, PriceVector, crossover_bytes,
+                      heterogeneity, miss_costs)
+from .trace import (Trace, next_use_indices, twemcache_like, two_class_trace,
+                    wiki_cdn_like, zipf_trace)
+from .policies import POLICIES, PolicyResult, simulate, total_cost_no_cache
+from .opt_exact import (OptResult, build_intervals, dp_opt_uniform,
+                        enumerate_opt_uniform, exact_opt_uniform, lp_opt)
+from .cost_foo import CostFooResult, cost_foo
+from .regret import regret, regret_table
+
+__all__ = [
+    "PRICE_VECTORS", "PriceVector", "crossover_bytes", "heterogeneity",
+    "miss_costs", "Trace", "next_use_indices", "twemcache_like",
+    "two_class_trace", "wiki_cdn_like", "zipf_trace", "POLICIES",
+    "PolicyResult", "simulate", "total_cost_no_cache", "OptResult",
+    "build_intervals", "dp_opt_uniform", "enumerate_opt_uniform",
+    "exact_opt_uniform", "lp_opt", "CostFooResult", "cost_foo", "regret",
+    "regret_table",
+]

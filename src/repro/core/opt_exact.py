@@ -1,0 +1,346 @@
+"""The exact offline dollar-optimum (paper §2).
+
+For each request t whose object recurs at next(t), a binary x_t decides
+whether the object is retained across the gap (a hit at next(t), saving
+c_{o(t)}), occupying capacity at every *interior* serving instant:
+
+    s_{o(tau)} + sum_{t < tau < next(t)} s_{o(t)} x_t  <=  B      (eq. 2)
+
+Uniform sizes -> consecutive-ones constraint matrix -> totally unimodular ->
+the LP relaxation is integral, and the optimum equals a min-cost flow on the
+time line: shelf arcs of capacity B-1 and one unit-capacity arc per reuse
+gap with cost -c_i.
+
+This module provides three mutually-validating solvers:
+
+  * `exact_opt_uniform`    — successive-shortest-path min-cost flow
+                             (paper's scalable exact form; pure numpy/heapq)
+  * `lp_opt`               — the interval LP in an O(T)-nonzero difference
+                             form, solved by scipy/HiGHS (covers variable
+                             sizes too, where it is the cost-FOO *fractional*
+                             lower bound)
+  * `dp_opt_uniform`,
+    `enumerate_opt_uniform`— brute-force oracles for tiny instances (tests)
+
+Total billed cost of a schedule = sum_t c_{o(t)}  -  savings(selected hits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .trace import next_use_indices
+
+__all__ = [
+    "Interval",
+    "build_intervals",
+    "OptResult",
+    "exact_opt_uniform",
+    "lp_opt",
+    "dp_opt_uniform",
+    "enumerate_opt_uniform",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    t: int      # request index of this access
+    u: int      # next access of the same object (u < T)
+    obj: int    # object id
+    save: float  # dollars saved if retained (c_obj)
+    size: float  # bytes occupied while retained
+
+
+def build_intervals(ids: np.ndarray, costs: np.ndarray,
+                    sizes: np.ndarray) -> list[Interval]:
+    """All reuse gaps (t, next(t)) with next(t) < T."""
+    ids = np.asarray(ids)
+    nxt = next_use_indices(ids)
+    T = len(ids)
+    out = []
+    for t in range(T):
+        u = int(nxt[t])
+        if u < T:
+            i = int(ids[t])
+            out.append(Interval(t, u, i, float(costs[i]), float(sizes[i])))
+    return out
+
+
+@dataclasses.dataclass
+class OptResult:
+    dollars: float            # total billed cost under the optimum
+    savings: float            # dollars saved vs caching nothing
+    total_no_cache: float     # sum of all c_{o(t)}
+    hits: int                 # number of retained gaps (incl. free ones)
+    selected: list[Interval]  # retained gaps (excl. trivially-free ones)
+    free_hits: int            # gaps with no interior instant (always kept)
+
+
+# ---------------------------------------------------------------------------
+# min-cost flow (successive shortest paths with Johnson potentials)
+# ---------------------------------------------------------------------------
+
+class _MCMF:
+    """Min-cost max-flow on a DAG-ordered node line, float costs.
+
+    Arc storage in paired-edge style: edge i and i^1 are duals.
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        self.head: list[list[int]] = [[] for _ in range(n)]
+        self.to: list[int] = []
+        self.cap: list[float] = []
+        self.cost: list[float] = []
+
+    def add(self, a: int, b: int, cap: float, cost: float) -> int:
+        i = len(self.to)
+        self.to.append(b); self.cap.append(cap); self.cost.append(cost)
+        self.to.append(a); self.cap.append(0.0); self.cost.append(-cost)
+        self.head[a].append(i)
+        self.head[b].append(i + 1)
+        return i
+
+    def solve(self, s: int, t: int, maxflow: float, eps: float = 1e-12):
+        """Send up to `maxflow` units s->t; stop once the shortest augmenting
+        path has non-negative cost (further units would be zero-cost shelf
+        traffic only). Returns (flow_sent_on_negative_paths, total_cost)."""
+        n = self.n
+        INF = float("inf")
+        # initial potentials: single forward pass (graph arcs all go a < b)
+        pot = [INF] * n
+        pot[s] = 0.0
+        for a in range(n):
+            if pot[a] == INF:
+                continue
+            for i in self.head[a]:
+                if self.cap[i] > eps:
+                    b = self.to[i]
+                    d = pot[a] + self.cost[i]
+                    if d < pot[b] - 1e-15:
+                        pot[b] = d
+        sent, total = 0.0, 0.0
+        while maxflow > eps:
+            dist = [INF] * n
+            par: list[int] = [-1] * n
+            dist[s] = 0.0
+            pq = [(0.0, s)]
+            while pq:
+                d, a = heapq.heappop(pq)
+                if d > dist[a] + 1e-15:
+                    continue
+                if a == t:
+                    break
+                for i in self.head[a]:
+                    if self.cap[i] <= eps:
+                        continue
+                    b = self.to[i]
+                    nd = d + self.cost[i] + pot[a] - pot[b]
+                    if nd < dist[b] - 1e-15:
+                        dist[b] = nd
+                        par[b] = i
+                        heapq.heappush(pq, (nd, b))
+            if dist[t] == INF:
+                break
+            path_cost = dist[t] + pot[t] - pot[s]
+            if path_cost >= -eps:
+                break  # no more negative (dollar-saving) paths
+            dt = dist[t]
+            for a in range(n):
+                if dist[a] < INF:
+                    # early sink-break leaves tentative labels; clamping by
+                    # dist[sink] keeps reduced costs non-negative (Johnson)
+                    pot[a] += min(dist[a], dt)
+                else:
+                    pot[a] += dt
+            # bottleneck
+            f = maxflow
+            b = t
+            while b != s:
+                i = par[b]
+                f = min(f, self.cap[i])
+                b = self.to[i ^ 1]
+            b = t
+            while b != s:
+                i = par[b]
+                self.cap[i] -= f
+                self.cap[i ^ 1] += f
+                b = self.to[i ^ 1]
+            sent += f
+            total += f * path_cost
+            maxflow -= f
+        return sent, total
+
+
+def exact_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int,
+                      return_selected: bool = False) -> OptResult:
+    """Exact dollar-optimum for uniform-size pages via min-cost flow.
+
+    Nodes = serving instants 1..T-1 plus sink T; shelf arcs p->p+1 with
+    capacity B-1 (cost 0); a unit arc (t+1)->u with cost -c_i per reuse gap.
+    Gaps with no interior instant (u == t+1) are free and always retained.
+    """
+    ids = np.asarray(ids)
+    T = len(ids)
+    total = float(costs[ids].sum())
+    if B < 1 or T == 0:
+        return OptResult(total, 0.0, total, 0, [], 0)
+    intervals = build_intervals(ids, costs, np.ones(max(1, ids.max() + 1)))
+    free = [iv for iv in intervals if iv.u == iv.t + 1]
+    paid = [iv for iv in intervals if iv.u > iv.t + 1]
+    free_save = sum(iv.save for iv in free)
+    k = B - 1
+    if k == 0 or not paid:
+        dollars = total - free_save
+        return OptResult(dollars, free_save, total, len(free), [], len(free))
+    # node numbering: instant p (1..T-1) -> index p-1 ; sink instant T -> T-1
+    n = T
+    g = _MCMF(n)
+    for p in range(1, T):  # shelf arc across every position cut p=1..T-1
+        g.add(p - 1, p, float(k), 0.0)
+    arc_of = {}
+    for j, iv in enumerate(paid):
+        # interval occupies instants t+1..u-1 -> arc node(t+1) -> node(u)
+        arc_of[j] = g.add(iv.t, iv.u - 1, 1.0, -iv.save)
+    _, cost = g.solve(0, T - 1, float(k))
+    savings = -cost + free_save
+    selected = []
+    if return_selected:
+        for j, iv in enumerate(paid):
+            if g.cap[arc_of[j]] < 0.5:  # unit arc saturated
+                selected.append(iv)
+    dollars = total - savings
+    return OptResult(dollars, savings, total,
+                     len(free) + sum(1 for j in arc_of if g.cap[arc_of[j]] < 0.5),
+                     selected, len(free))
+
+
+# ---------------------------------------------------------------------------
+# sparse interval LP (difference form) — uniform exact / variable fractional
+# ---------------------------------------------------------------------------
+
+def lp_opt(ids: np.ndarray, costs: np.ndarray, sizes: np.ndarray, B: float):
+    """Interval LP (eq. 2) in an O(T + m)-nonzero difference form via HiGHS.
+
+    Returns (dollars_lower_bound, savings_upper_bound, x_fractional, paid).
+    For uniform sizes the matrix is totally unimodular: x is integral and the
+    bound is the exact optimum. For variable sizes this is the cost-FOO
+    fractional lower bound on billed dollars.
+
+    Difference form: occupancy z_tau (tau = 1..T-1) with
+        z_1 = sum_{t=0} s_i x_i ;  z_tau - z_{tau-1} = starts(tau-1) - ends(tau)
+        0 <= z_tau <= B - s_{o(tau)}   (B if s_{o(tau)} > B: fetch-through)
+    which has 2 nonzeros per x and per z instead of one per covered instant.
+    """
+    from scipy import sparse
+    from scipy.optimize import linprog
+
+    ids = np.asarray(ids)
+    T = len(ids)
+    total = float(costs[ids].sum())
+    intervals = build_intervals(ids, costs, sizes)
+    free_save = sum(iv.save for iv in intervals
+                    if iv.u == iv.t + 1 and iv.size <= B)
+    paid = [iv for iv in intervals if iv.u > iv.t + 1 and iv.size <= B]
+    m = len(paid)
+    nz = T - 1  # number of occupancy variables z_1..z_{T-1}
+    if m == 0 or nz <= 0:
+        return total - free_save, free_save, np.zeros(0), paid
+    # conditioning: cloud miss costs are ~1e-8 $ (below HiGHS's default
+    # tolerances) and sizes span bytes..GB — normalize both scales
+    save_scale = float(np.mean([iv.save for iv in paid])) or 1.0
+    size_scale = float(np.mean([iv.size for iv in paid])) or 1.0
+    rows, cols, vals = [], [], []
+    # z coefficients: +1 in row tau, -1 in row tau+1  (rows are 0-indexed tau-1)
+    for tau in range(1, T):      # tau = 1..T-1 ; row index tau-1
+        rows.append(tau - 1); cols.append(m + tau - 1); vals.append(1.0)
+        if tau + 1 <= T - 1:
+            rows.append(tau); cols.append(m + tau - 1); vals.append(-1.0)
+    # x coefficients: interval occupies instants t+1..u-1
+    for j, iv in enumerate(paid):
+        rows.append(iv.t + 1 - 1); cols.append(j); vals.append(-iv.size / size_scale)
+        if iv.u <= T - 1:        # stops occupying at instant u
+            rows.append(iv.u - 1); cols.append(j); vals.append(iv.size / size_scale)
+    A = sparse.csc_matrix((vals, (rows, cols)), shape=(nz, m + nz))
+    b_eq = np.zeros(nz)
+    c = np.concatenate([-np.array([iv.save / save_scale for iv in paid]),
+                        np.zeros(nz)])
+    zcap = np.array([max(B - sizes[ids[tau]], 0.0) if sizes[ids[tau]] <= B else B
+                     for tau in range(1, T)]) / size_scale
+    bounds = [(0.0, 1.0)] * m + [(0.0, float(zc)) for zc in zcap]
+    res = linprog(c, A_eq=A, b_eq=b_eq, bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"LP failed: {res.message}")
+    x = res.x[:m]
+    savings = float(-res.fun) * save_scale + free_save
+    return total - savings, savings, x, paid
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracles (tests only)
+# ---------------------------------------------------------------------------
+
+def enumerate_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int) -> float:
+    """Exhaustive subset enumeration over reuse gaps (validates eq. 2 itself).
+    Only for #paid intervals <= ~18."""
+    ids = np.asarray(ids)
+    T = len(ids)
+    total = float(costs[ids].sum())
+    intervals = build_intervals(ids, costs, np.ones(max(1, ids.max() + 1)))
+    free_save = sum(iv.save for iv in intervals if iv.u == iv.t + 1)
+    paid = [iv for iv in intervals if iv.u > iv.t + 1]
+    m = len(paid)
+    assert m <= 20, "too many intervals to enumerate"
+    best = 0.0
+    for mask in range(1 << m):
+        occ = np.zeros(T, dtype=np.int64)
+        save = 0.0
+        ok = True
+        for j in range(m):
+            if mask >> j & 1:
+                iv = paid[j]
+                occ[iv.t + 1:iv.u] += 1
+                save += iv.save
+        if B >= 1 and (occ > B - 1).any():
+            ok = False
+        if ok:
+            best = max(best, save)
+    return total - (best + free_save)
+
+
+def dp_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int) -> float:
+    """State-space DP over cache contents — validates that eq. (2) models
+    real caching (independent of the interval formulation). Tiny inputs only.
+
+    Semantics match eq. (2): the object being served always occupies a slot
+    at its serving instant (no bypass), so a miss on a full cache must evict
+    one resident even if the fetched object is then dropped immediately.
+    """
+    ids = np.asarray(ids)
+    states: dict[frozenset, float] = {frozenset(): 0.0}
+    for t, i in enumerate(ids):
+        i = int(i)
+        new: dict[frozenset, float] = {}
+
+        def upd(st, c):
+            if st not in new or c < new[st]:
+                new[st] = c
+
+        for st, c in states.items():
+            if i in st:
+                upd(st, c)  # hit
+                continue
+            c2 = c + float(costs[i])
+            S = set(st)
+            if len(S) < B:
+                upd(frozenset(S | {i}), c2)  # retain the fetched object
+                upd(frozenset(S), c2)        # drop it right after serving
+            else:
+                # full: serving displaces one resident no matter what
+                for v in S:
+                    upd(frozenset((S - {v}) | {i}), c2)
+                    upd(frozenset(S - {v}), c2)
+        states = new
+    return min(states.values())

@@ -1,0 +1,182 @@
+"""JAX (lax.scan) cache-policy simulator — the TPU-native replay engine.
+
+The paper's sweep experiments replay the same trace under hundreds of
+(policy, price-vector, budget) cells. Sequential heap-based simulation does
+not vectorize; here each policy step is a pure function over fixed-size
+state arrays and the whole replay is one `lax.scan`, vmap-able across cells
+and jit-able onto accelerators.
+
+Policies are encoded as *score weights*: the victim is the cached object
+with the minimum score, where
+
+  score(i) = w_t * last_touch(i)                     (LRU)
+           + w_f * freq(i)                           (LFU)
+           + w_gd   * (L + c_i / s_i)                (GreedyDual-Size)
+           + w_gdsf * (L + freq(i) * c_i / s_i)      (GDSF)
+           + w_bel  * (-next_use(i))                 (Belady: evict farthest)
+           + w_cb   * (-(s_i * gap_i / c_i))         (cost-aware Belady)
+
+Uniform-size mode (the paper's exact-reference regime): one eviction per
+miss, no data-dependent loop. Variable sizes stay on the host reference
+(`policies.py`); see DESIGN.md §3.
+
+Validated step-for-step against `policies.py` in tests/test_policies_jax.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trace import next_use_indices
+
+__all__ = ["PolicyWeights", "POLICY_WEIGHTS", "simulate_jax", "sweep_jax"]
+
+_BIG = jnp.float32(3.4e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyWeights:
+    w_t: float = 0.0
+    w_f: float = 0.0
+    w_gd: float = 0.0
+    w_gdsf: float = 0.0
+    w_bel: float = 0.0
+    w_cb: float = 0.0
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.w_t, self.w_f, self.w_gd, self.w_gdsf,
+                         self.w_bel, self.w_cb], dtype=np.float32)
+
+
+POLICY_WEIGHTS: dict[str, PolicyWeights] = {
+    "lru": PolicyWeights(w_t=1.0),
+    "lfu": PolicyWeights(w_f=1.0, w_t=1e-12),
+    "gds": PolicyWeights(w_gd=1.0),
+    "gdsf": PolicyWeights(w_gdsf=1.0),
+    "belady": PolicyWeights(w_bel=1.0),
+    "cost_belady": PolicyWeights(w_cb=1.0),
+}
+
+
+def _static_score(w, t, freq_i, infl, c_over_s):
+    """Frozen-at-touch score components (LRU / LFU / GDS / GDSF)."""
+    return (w[0] * t + w[1] * freq_i
+            + w[2] * (infl + c_over_s)
+            + w[3] * (infl + freq_i * c_over_s))
+
+
+@functools.partial(jax.jit, static_argnames=("num_objects",))
+def _simulate(ids, nxt, costs, sizes, capacity, weights, num_objects: int):
+    """One policy replay, uniform-size pages. Returns (dollars, hits).
+
+    Victim = lexicographic argmin of (score, last_touch) over cached objects,
+    where score = static (frozen at touch) + dynamic (Belady / cost-Belady,
+    evaluated at eviction time from the stored next-use index). This exactly
+    matches the heap key of the Python reference.
+    """
+    T = ids.shape[0]
+    n = num_objects
+    c_over_s = (costs / jnp.maximum(sizes, 1e-30)).astype(jnp.float32)
+    INT_BIG = jnp.int32(2**31 - 1)
+
+    def total_scores(static, stored_nxt, t):
+        """static + dynamic part, per object."""
+        nxtf = stored_nxt.astype(jnp.float32)
+        gap = jnp.maximum(nxtf - t, 1.0)
+        never = stored_nxt >= T
+        # belady: evict max next-use  -> score -nxt (never-reused = -BIG)
+        bel = jnp.where(never, -_BIG, -nxtf)
+        # cost-belady: evict max s*gap/c -> score -(s*gap/c)
+        cb = jnp.where(never, -_BIG, -(sizes * gap / jnp.maximum(costs, 1e-30)))
+        return static + weights[4] * bel + weights[5] * cb
+
+    def step(state, inp):
+        cached, static, stored_nxt, touch, freq, used, infl, dollars, hits = state
+        t, i, nu = inp
+        tf = t.astype(jnp.float32)
+        freq = freq.at[i].add(1)
+        is_hit = cached[i]
+        dollars = dollars + jnp.where(is_hit, 0.0, costs[i])
+        hits = hits + is_hit.astype(jnp.int32)
+
+        # victim: lexicographic argmin of (score, last_touch) among cached\{i}
+        mask = cached.at[i].set(False)
+        scores = jnp.where(mask, total_scores(static, stored_nxt, tf), _BIG)
+        min_s = jnp.min(scores)
+        tie = scores <= min_s  # exact equality; _BIG rows excluded by min
+        victim = jnp.argmin(jnp.where(tie, touch, INT_BIG))
+        victim_score = scores[victim]
+        full = used >= capacity
+
+        # eq.-(2) semantics: a miss always inserts (mandatory displacement)
+        do_insert = ~is_hit
+        do_evict = do_insert & full & (victim_score < _BIG)
+        cached = cached.at[victim].set(jnp.where(do_evict, False, cached[victim]))
+        # GreedyDual aging: L := priority of the evicted victim
+        gd_active = (weights[2] + weights[3]) > 0
+        infl = jnp.where(do_evict & gd_active, victim_score, infl)
+        my_static = _static_score(weights, tf, freq[i].astype(jnp.float32),
+                                  infl, c_over_s[i])
+        used = used - jnp.where(do_evict, 1, 0) + jnp.where(do_insert, 1, 0)
+        cached = cached.at[i].set(cached[i] | do_insert)
+        # touches (hit or insert) refresh score, next-use and touch time
+        static = static.at[i].set(my_static)
+        stored_nxt = stored_nxt.at[i].set(nu)
+        touch = touch.at[i].set(t)
+        return (cached, static, stored_nxt, touch, freq, used, infl,
+                dollars, hits), None
+
+    init = (jnp.zeros(n, bool), jnp.full(n, _BIG, jnp.float32),
+            jnp.full(n, T, jnp.int32), jnp.zeros(n, jnp.int32),
+            jnp.zeros(n, jnp.int32), jnp.int32(0), jnp.float32(0.0),
+            jnp.float32(0.0), jnp.int32(0))
+    ts = jnp.arange(T, dtype=jnp.int32)
+    final, _ = jax.lax.scan(step, init, (ts, ids, nxt))
+    return final[-2], final[-1]
+
+
+def simulate_jax(policy: str, ids: np.ndarray, costs: np.ndarray,
+                 capacity_pages: int, num_objects: int | None = None,
+                 sizes: np.ndarray | None = None):
+    """Replay one policy on a uniform-size page trace. Returns (dollars, hits).
+
+    `sizes` only affects the cost-density terms of GDS/GDSF/cost-Belady
+    (the cache itself is page-uniform, matching the exact reference)."""
+    ids = np.asarray(ids, dtype=np.int32)
+    n = int(num_objects if num_objects is not None else ids.max() + 1)
+    nxt = next_use_indices(ids, n).astype(np.int32)
+    w = POLICY_WEIGHTS[policy].as_array()
+    s = np.ones(n, np.float32) if sizes is None else np.asarray(sizes, np.float32)
+    d, h = _simulate(jnp.asarray(ids), jnp.asarray(nxt),
+                     jnp.asarray(costs, dtype=jnp.float32), jnp.asarray(s),
+                     jnp.int32(capacity_pages), jnp.asarray(w), n)
+    return float(d), int(h)
+
+
+def sweep_jax(policy: str, ids: np.ndarray, cost_matrix: np.ndarray,
+              budgets: np.ndarray, num_objects: int | None = None,
+              sizes: np.ndarray | None = None) -> np.ndarray:
+    """Batched replay: vmap over (price-vector x budget) cells on device.
+
+    cost_matrix: (P, N) per-object costs for P price vectors.
+    budgets:     (K,) page budgets.
+    Returns dollars array of shape (P, K).
+    """
+    ids = np.asarray(ids, dtype=np.int32)
+    n = int(num_objects if num_objects is not None else ids.max() + 1)
+    nxt = jnp.asarray(next_use_indices(ids, n).astype(np.int32))
+    w = jnp.asarray(POLICY_WEIGHTS[policy].as_array())
+    s = jnp.ones(n, jnp.float32) if sizes is None else jnp.asarray(sizes, jnp.float32)
+    idsj = jnp.asarray(ids)
+
+    def one(costs, B):
+        d, _ = _simulate(idsj, nxt, costs, s, B, w, n)
+        return d
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    return np.asarray(f(jnp.asarray(cost_matrix, dtype=jnp.float32),
+                        jnp.asarray(budgets, dtype=jnp.int32)))

@@ -1,0 +1,151 @@
+"""Online egress cache: the paper's policies as a deployable component.
+
+Sits between compute and the ObjectStore. Pluggable policy (LRU / LFU /
+GDS / GDSF — the online subset of core/policies.py), byte-capacity budget,
+billing-faithful accounting, and an `audit()` that replays the observed
+access trace against the exact offline dollar-optimum (core/opt_exact,
+cost-FOO) — the framework-native use of the paper's reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (PRICE_VECTORS, Trace, cost_foo, exact_opt_uniform,
+                        heterogeneity, regret)
+from repro.core.pricing import PriceVector
+from .store import ObjectStore
+
+__all__ = ["EgressCache", "AuditReport"]
+
+
+@dataclasses.dataclass
+class AuditReport:
+    policy: str
+    observed_dollars: float
+    opt_dollars_lower: float     # exact (uniform) or cost-FOO lower bound
+    opt_dollars_upper: float
+    dollar_regret: float         # vs the lower bound (conservative)
+    heterogeneity: float
+    crossover_bytes: float
+    mean_object_bytes: float
+    requests: int
+    hit_rate: float
+
+    def summary(self) -> str:
+        return (f"[egress audit] policy={self.policy} "
+                f"$={self.observed_dollars:.6f} "
+                f"OPT in [{self.opt_dollars_lower:.6f}, "
+                f"{self.opt_dollars_upper:.6f}] "
+                f"regret={self.dollar_regret:.3f} H={self.heterogeneity:.3f} "
+                f"s*={self.crossover_bytes:.0f}B "
+                f"mean_obj={self.mean_object_bytes:.0f}B "
+                f"hit_rate={self.hit_rate:.3f}")
+
+
+class EgressCache:
+    """Byte-budgeted local cache over an ObjectStore, dollar-aware."""
+
+    def __init__(self, store: ObjectStore, capacity_bytes: float,
+                 policy: str = "gdsf"):
+        assert policy in ("lru", "lfu", "gds", "gdsf"), policy
+        self.store = store
+        self.capacity = float(capacity_bytes)
+        self.policy = policy
+        self.used = 0.0
+        self._data: dict[str, bytes] = {}
+        self._prio: dict[str, tuple[float, int]] = {}
+        self._heap: list[tuple[float, int, str]] = []
+        self._freq: dict[str, int] = {}
+        self._inflation = 0.0
+        self._clock = 0
+        # access log for offline audit
+        self._trace_keys: list[str] = []
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def _miss_cost(self, nbytes: int) -> float:
+        return float(self.store.meter.price.miss_cost(nbytes))
+
+    def _priority(self, key: str, nbytes: int) -> float:
+        dens = self._miss_cost(nbytes) / max(nbytes, 1)
+        if self.policy == "lru":
+            return float(self._clock)
+        if self.policy == "lfu":
+            return float(self._freq[key])
+        if self.policy == "gds":
+            return self._inflation + dens
+        return self._inflation + self._freq[key] * dens  # gdsf
+
+    def _touch(self, key: str, nbytes: int):
+        pr = self._priority(key, nbytes)
+        self._prio[key] = (pr, self._clock)
+        heapq.heappush(self._heap, (pr, self._clock, key))
+
+    def _evict_until_fits(self, need: float):
+        while self.used + need > self.capacity and self._prio:
+            pr, tt, key = heapq.heappop(self._heap)
+            if self._prio.get(key) != (pr, tt):
+                continue
+            del self._prio[key]
+            data = self._data.pop(key)
+            self.used -= len(data)
+            if self.policy in ("gds", "gdsf"):
+                self._inflation = pr
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> bytes:
+        self._clock += 1
+        self._trace_keys.append(key)
+        self._freq[key] = self._freq.get(key, 0) + 1
+        if key in self._data:
+            self.hits += 1
+            self._touch(key, len(self._data[key]))
+            return self._data[key]
+        self.misses += 1
+        data = self.store.get(key)   # billed fetch
+        if len(data) <= self.capacity:
+            self._evict_until_fits(len(data))
+            self._data[key] = data
+            self.used += len(data)
+            self._touch(key, len(data))
+        return data
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    # ------------------------------------------------------------------
+    def audit(self, budget_pages: Optional[int] = None) -> AuditReport:
+        """Replay the observed trace against the exact offline reference."""
+        keys = self._trace_keys
+        uniq = {k: i for i, k in enumerate(dict.fromkeys(keys))}
+        ids = np.array([uniq[k] for k in keys], np.int32)
+        sizes = np.zeros(len(uniq))
+        for k, i in uniq.items():
+            sizes[i] = self.store.size_of(k)
+        costs = self.store.meter.price.miss_cost(sizes)
+        tr = Trace(ids=ids, sizes=sizes, name="egress_audit")
+        uniform = len(set(sizes.tolist())) == 1
+        if uniform:
+            B = budget_pages or max(1, int(self.capacity // sizes[0]))
+            o = exact_opt_uniform(ids, costs, B)
+            lower = upper = o.dollars
+        else:
+            r = cost_foo(tr, costs, self.capacity)
+            lower, upper = r.lower, r.upper
+        # the meter billed exactly this cache's misses
+        observed = float(self.store.meter.dollars)
+        return AuditReport(
+            policy=self.policy, observed_dollars=observed,
+            opt_dollars_lower=lower, opt_dollars_upper=upper,
+            dollar_regret=regret(observed, lower),
+            heterogeneity=heterogeneity(ids, costs),
+            crossover_bytes=self.store.meter.price.crossover_bytes,
+            mean_object_bytes=float(sizes[ids].mean()),
+            requests=len(keys), hit_rate=self.hit_rate)

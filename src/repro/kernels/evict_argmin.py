@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: masked lexicographic argmin — the eviction decision.
+
+Every priority policy's inner loop (LRU/LFU/GDS/GDSF/Belady/cost-Belady,
+paper §2) is "find the cached object with the smallest (score, last_touch)".
+A heap does not vectorize; on TPU the whole object table lives in VMEM and
+the reduction runs at vector width (DESIGN.md §3). This kernel blocks the
+table (BLOCK_N multiple of 128 lanes), keeps a running lexicographic
+minimum in SMEM scratch across sequential grid steps, and emits the final
+(victim index, victim score).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["evict_argmin_pallas"]
+
+_BIG = 3.4e38
+_INT_BIG = 2**31 - 1
+
+
+def _kernel(scores_ref, touch_ref, mask_ref, idx_out, val_out,
+            best_ref, *, block_n: int, num_blocks: int):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        best_ref[0] = jnp.float32(_BIG)   # best score
+        best_ref[1] = jnp.float32(_INT_BIG)  # best touch (lex tiebreak)
+        best_ref[2] = jnp.float32(-1)     # best index
+
+    s = jnp.where(mask_ref[...], scores_ref[...].astype(jnp.float32),
+                  jnp.float32(_BIG))
+    local_min = jnp.min(s)
+    tie = s <= local_min
+    touch = jnp.where(tie, touch_ref[...], _INT_BIG)
+    local_arg = jnp.argmin(touch)
+    local_touch = touch[local_arg].astype(jnp.float32)
+    local_idx = (g * block_n + local_arg).astype(jnp.float32)
+
+    better = (local_min < best_ref[0]) | (
+        (local_min == best_ref[0]) & (local_touch < best_ref[1]))
+
+    @pl.when(better)
+    def _upd():
+        best_ref[0] = local_min
+        best_ref[1] = local_touch
+        best_ref[2] = local_idx
+
+    @pl.when(g == num_blocks - 1)
+    def _emit():
+        safe = jnp.maximum(best_ref[2], 0.0)
+        idx_out[0] = safe.astype(jnp.int32)
+        val_out[0] = best_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def evict_argmin_pallas(scores: jax.Array, touch: jax.Array, mask: jax.Array,
+                        block_n: int = 2048, interpret: bool = True):
+    """Lexicographic argmin of (score, touch) over mask==True entries.
+
+    scores: (N,) float; touch: (N,) int32; mask: (N,) bool.
+    Returns (victim_index int32 scalar, victim_score float32 scalar);
+    score is +BIG when the mask is empty.
+    """
+    n = scores.shape[0]
+    num_blocks = -(-n // block_n)
+    n_pad = num_blocks * block_n
+    if n_pad != n:
+        scores = jnp.pad(scores, (0, n_pad - n))
+        touch = jnp.pad(touch, (0, n_pad - n))
+        mask = jnp.pad(mask, (0, n_pad - n))
+    idx, val = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, num_blocks=num_blocks),
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((block_n,), lambda g: (g,)),
+                  pl.BlockSpec((block_n,), lambda g: (g,)),
+                  pl.BlockSpec((block_n,), lambda g: (g,))],
+        out_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+                   pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+        interpret=interpret,
+    )(scores, touch.astype(jnp.int32), mask)
+    return idx[0], val[0]

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: blocked prefix-sum of occupancy deltas (eq. 2 LHS).
+
+Feasibility checking / contention profiling of a retention schedule needs
+the occupancy profile occ(p) = sum of sizes of intervals covering serving
+instant p. With per-position deltas (+s_i at interval start, -s_i one past
+its end) this is a prefix sum over the request timeline — on TPU a
+sequential-grid blocked scan: each grid step cumsums its VMEM block and
+adds the running total carried in SMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["interval_occupancy_pallas"]
+
+
+def _kernel(deltas_ref, out_ref, carry_ref, *, block_t: int):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        carry_ref[0] = jnp.float32(0.0)
+
+    block = deltas_ref[...].astype(jnp.float32)
+    scanned = jnp.cumsum(block) + carry_ref[0]
+    out_ref[...] = scanned
+    carry_ref[0] = scanned[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def interval_occupancy_pallas(deltas: jax.Array, block_t: int = 2048,
+                              interpret: bool = True) -> jax.Array:
+    """Inclusive prefix sum of (T,) float deltas -> (T,) float32 occupancy."""
+    T = deltas.shape[0]
+    num_blocks = -(-T // block_t)
+    Tpad = num_blocks * block_t
+    if Tpad != T:
+        deltas = jnp.pad(deltas, (0, Tpad - T))
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((block_t,), lambda g: (g,))],
+        out_specs=pl.BlockSpec((block_t,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((Tpad,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(deltas)
+    return out[:T]

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: next-use index computation (Belady / interval build).
+
+The paper's offline machinery needs next(t) for every request — the Belady
+oracles and the interval construction of eq. (2) both start from it. On GPU
+this is a scatter in a backward loop; the TPU adaptation (DESIGN.md §3)
+keeps the last-seen table resident in VMEM *scratch* and walks the request
+stream in reverse, one VMEM-sized block of requests per sequential grid
+step. TPU grids execute in order, so the scratch table carries across
+blocks for free.
+
+Layout: requests are processed in blocks of `block_t`; the table holds one
+int32 slot per object (padded to a multiple of 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["next_use_pallas"]
+
+
+def _kernel(ids_ref, out_ref, table_ref, *, T: int, block_t: int,
+            num_blocks: int):
+    g = pl.program_id(0)
+    # first sequential grid step: no object seen yet -> next use = T
+    @pl.when(g == 0)
+    def _init():
+        table_ref[...] = jnp.full_like(table_ref, T)
+
+    # this grid step handles requests [blk*block_t, ...) in reverse order
+    blk = num_blocks - 1 - g
+    base = blk * block_t
+
+    def body(k, _):
+        # position inside the block, walked back-to-front
+        p = block_t - 1 - k
+        t = base + p
+
+        @pl.when(t < T)
+        def _():
+            i = ids_ref[p]
+            out_ref[p] = table_ref[i]
+            table_ref[i] = t
+        return 0
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_objects", "block_t", "interpret"))
+def next_use_pallas(ids: jax.Array, num_objects: int, block_t: int = 1024,
+                    interpret: bool = True) -> jax.Array:
+    """next(t) for each request; T where the object never recurs.
+
+    ids: (T,) int32 in [0, num_objects). Returns (T,) int32.
+    """
+    T = ids.shape[0]
+    num_blocks = -(-T // block_t)
+    Tpad = num_blocks * block_t
+    if Tpad != T:
+        ids = jnp.pad(ids, (0, Tpad - T))
+    # pad the object table to the 128-lane boundary
+    n_pad = -(-num_objects // 128) * 128
+    grid = (num_blocks,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, T=T, block_t=block_t,
+                          num_blocks=num_blocks),
+        grid=grid,
+        # reverse-order block mapping: grid step g touches block G-1-g
+        in_specs=[pl.BlockSpec((block_t,),
+                               lambda g: (num_blocks - 1 - g,))],
+        out_specs=pl.BlockSpec((block_t,), lambda g: (num_blocks - 1 - g,)),
+        out_shape=jax.ShapeDtypeStruct((Tpad,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_pad,), jnp.int32)],
+        interpret=interpret,
+    )(ids.astype(jnp.int32))
+    return out[:T]

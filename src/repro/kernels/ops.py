@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the Pallas
+interpreter executes the kernel body in Python); on a real TPU pass
+interpret=False (or rely on the default backend detection below) to lower
+to Mosaic. The pure-jnp oracles in ref.py define the semantics either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .evict_argmin import evict_argmin_pallas
+from .interval_occupancy import interval_occupancy_pallas
+from .next_use import next_use_pallas
+
+__all__ = ["next_use", "evict_argmin", "interval_occupancy", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def next_use(ids: jax.Array, num_objects: int, *, block_t: int = 1024,
+             use_pallas: bool | None = None) -> jax.Array:
+    """next(t) per request (T where the object never recurs)."""
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return next_use_pallas(ids, num_objects, block_t=block_t,
+                               interpret=not on_tpu())
+    return ref.next_use_ref(ids, num_objects)
+
+
+def evict_argmin(scores: jax.Array, touch: jax.Array, mask: jax.Array, *,
+                 block_n: int = 2048, use_pallas: bool | None = None):
+    """Victim selection: lexicographic argmin of (score, touch) where mask."""
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return evict_argmin_pallas(scores, touch, mask, block_n=block_n,
+                                   interpret=not on_tpu())
+    return ref.evict_argmin_ref(scores, touch, mask)
+
+
+def interval_occupancy(deltas: jax.Array, *, block_t: int = 2048,
+                       use_pallas: bool | None = None) -> jax.Array:
+    """Occupancy profile (inclusive prefix sum) of eq. (2)'s LHS."""
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return interval_occupancy_pallas(deltas, block_t=block_t,
+                                         interpret=not on_tpu())
+    return ref.interval_occupancy_ref(deltas)

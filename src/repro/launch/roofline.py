@@ -1,0 +1,98 @@
+"""Roofline terms from the compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per the assignment):
+  peak_flops = 197e12 FLOP/s bf16 per chip
+  hbm_bw     = 819e9  B/s per chip
+  ici_bw     = 50e9   B/s per link
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* FLOPs
+and bytes (validated against analytic matmul counts in the probe run, ±0.5%),
+so the three terms are:
+
+  compute    = flops_per_device / peak_flops
+  memory     = bytes_per_device / hbm_bw
+  collective = collective_bytes_per_device / ici_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+__all__ = ["RooflineTerms", "terms_from_analysis", "count_params",
+           "model_flops", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO flops x devices)
+    roofline_fraction: float     # compute_s / max(all terms)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def terms_from_analysis(flops_dev: float, bytes_dev: float,
+                        coll_bytes_dev: float, num_devices: int,
+                        model_flops_total: float) -> RooflineTerms:
+    c = flops_dev / PEAK_FLOPS
+    m = bytes_dev / HBM_BW
+    k = coll_bytes_dev / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": k}
+    dominant = max(terms, key=terms.get)
+    bound = max(c, m, k)
+    hlo_total = flops_dev * num_devices
+    return RooflineTerms(
+        flops_dev=flops_dev, bytes_dev=bytes_dev,
+        coll_bytes_dev=coll_bytes_dev,
+        compute_s=c, memory_s=m, collective_s=k, dominant=dominant,
+        model_flops_total=model_flops_total,
+        useful_ratio=(model_flops_total / hlo_total) if hlo_total else 0.0,
+        roofline_fraction=(c / bound) if bound > 0 else 0.0,
+    )
+
+
+def count_params(abstract_params, axes_tree, *, top_k: int = 0,
+                 num_experts: int = 0) -> tuple[float, float]:
+    """(total, active) parameter counts; embedding/unembedding excluded from
+    `active` FLOP accounting the standard way (returned totals include them
+    separately)."""
+    import jax
+
+    total = 0.0
+    active = 0.0
+    embed = 0.0
+
+    leaves_p = jax.tree.leaves(abstract_params)
+    leaves_a = jax.tree.leaves(axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    for p, ax in zip(leaves_p, leaves_a):
+        n = float(np.prod(p.shape))
+        total += n
+        if isinstance(ax, tuple) and "vocab" in ax:
+            embed += n
+            continue
+        if isinstance(ax, tuple) and "expert" in ax and num_experts > 0:
+            active += n * (top_k / num_experts)
+        else:
+            active += n
+    return total, active, embed
+
+
+def model_flops(kind: str, n_active_nonembed: float, tokens: float) -> float:
+    """6ND for training, 2ND for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_nonembed * tokens

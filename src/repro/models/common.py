@@ -1,0 +1,349 @@
+"""Shared model substrate: configs, parameter definitions, layer primitives.
+
+Every architecture is a pure-JAX module: `param_defs(cfg)` declares each
+parameter's (shape, logical axes); `init_params` materializes them;
+`abstract_params` returns ShapeDtypeStructs for the no-allocation dry-run.
+Logical axes are mapped to mesh axes by repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical axis names, len == ndim
+    init: str = "normal"              # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = None                 # default -> cfg param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact figures from the assignment table)."""
+    name: str
+    family: str                   # dense | moe | xlstm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0    # chatglm applies RoPE to half the head dim
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_expert: int = 0             # routed-expert hidden dim (d_ff of an expert)
+    moe_every: int = 1            # 1 = every layer is MoE (layer 0 stays dense
+                                  # when first_dense is set)
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    # local/global attention (gemma3, recurrentgemma's attn layers)
+    window: int = 0               # 0 = full attention
+    global_every: int = 0         # gemma3: every Nth layer is global
+    # hybrid (recurrentgemma): pattern period 3 -> (rec, rec, attn)
+    attn_every: int = 0
+    rglru_conv_width: int = 4
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    cross_attend: bool = False
+    # vlm
+    num_vision_tokens: int = 0
+    mrope_sections: tuple[int, ...] = ()
+    # activations / norms
+    act: str = "swiglu"           # swiglu | gelu
+    logit_softcap: float = 0.0
+    # dtypes
+    param_dtype: Any = DEFAULT_DTYPE
+    # training
+    tie_embeddings: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def is_moe_layer(self, layer: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        if layer < self.first_k_dense:
+            return False
+        return (layer % self.moe_every) == (self.moe_every - 1) \
+            if self.moe_every > 1 else True
+
+    def is_global_layer(self, layer: int) -> bool:
+        """gemma3: 5 local : 1 global."""
+        if self.global_every <= 0:
+            return self.window == 0
+        return (layer % self.global_every) == (self.global_every - 1)
+
+    def is_attn_layer(self, layer: int) -> bool:
+        """recurrentgemma: (rec, rec, attn) repeating."""
+        if self.attn_every <= 0:
+            return True
+        return (layer % self.attn_every) == (self.attn_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# parameter materialization
+# ---------------------------------------------------------------------------
+
+def init_params(defs: Any, key: jax.Array, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * d.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def axes_tree(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hints (set by the launcher; no-op on single-device CPU)
+# ---------------------------------------------------------------------------
+
+_ACT_MESH = None
+
+
+def set_activation_mesh(mesh):
+    """Launcher hook: activation with_sharding_constraint hints resolve
+    against this mesh ("pod"/"data" = DP+FSDP, "model" = TP). None disables
+    all hints (CPU smoke tests)."""
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the launcher mesh; each entry is a
+    mesh-axis name, a tuple of names, or None. Axes missing from the mesh or
+    not dividing the dim are dropped."""
+    if _ACT_MESH is None:
+        return x
+    mesh = _ACT_MESH
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        axt = (ax,) if isinstance(ax, str) else tuple(ax)
+        axt = tuple(a for a in axt if a in mesh.axis_names)
+        size = 1
+        for a in axt:
+            size *= mesh.shape[a]
+        if axt and dim % size == 0:
+            spec.append(axt if len(axt) > 1 else axt[0])
+        else:
+            spec.append(None)
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+DP_AXES = ("pod", "data")
+
+
+def tp_divides(n: int) -> bool:
+    """True when dim n divides the active mesh's "model" axis (False when
+    no mesh is set — hints are no-ops then anyway)."""
+    if _ACT_MESH is None or "model" not in _ACT_MESH.axis_names:
+        return False
+    return n % _ACT_MESH.shape["model"] == 0
+
+
+# ---------------------------------------------------------------------------
+# layer primitives (pure jnp; XLA-visible for the roofline — DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def _rope_angles(positions, dim, theta):
+    """positions (...,), dim even -> (..., dim/2) angles."""
+    freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * freq
+
+
+def apply_rope(x, positions, theta=1e4, fraction=1.0):
+    """x: (B, S, H, D). Rotates the first `fraction` of D."""
+    D = x.shape[-1]
+    rd = int(D * fraction)
+    rd -= rd % 2
+    xr, xp = x[..., :rd], x[..., rd:]
+    ang = _rope_angles(positions, rd, theta)          # (B, S, rd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1) if rd < D else out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=1e4):
+    """qwen2-vl M-RoPE: three position streams over head-dim sections.
+
+    x: (B, S, H, D); positions3: (3, B, S); sections: half-dim split sizes
+    summing to D/2.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    # choose which position stream drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=half)
+    pos = positions3.astype(jnp.float32)[sec_id]           # (half, B, S)
+    ang = jnp.einsum("hbs,h->bsh", pos, freq)              # (B, S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, k_offset=0,
+              logit_softcap=0.0):
+    """GQA attention, full materialization. q: (B, Sq, H, D); k/v: (B, Sk, G, D).
+
+    `q_offset` positions the queries inside the kv timeline (decode /
+    chunked prefill); `k_offset` positions the keys (shift-window caches,
+    possibly negative — negative key positions are masked out).
+    `window` > 0 limits attention to the last W keys.
+    """
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    q = q.reshape(B, Sq, G, H // G, D)
+    logits = jnp.einsum("bqghd,bkgd->bgqhk", q, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(D)
+    if logit_softcap > 0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1]) + k_offset
+    mask = jnp.broadcast_to(kpos[None, :] >= 0, (Sq, k.shape[1]))
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgqhk,bkgd->bqghd", probs, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      k_offset=0, logit_softcap=0.0, kv_chunk=1024):
+    """Flash-style online-softmax attention, lax.scan over KV chunks.
+
+    Peak memory O(Sq * kv_chunk) instead of O(Sq * Sk) — used for the 32k
+    prefill / 4k train cells so memory_analysis proves real deployability.
+
+    KV heads are expanded to the full H inside the chunk loop: the score
+    slab then carries the H axis (usually TP-divisible) instead of the GQA
+    G axis (usually not), so the activation hints can shard it — without
+    this the slab replicates across TP (measured 280 GiB/device on
+    qwen2-vl-72b prefill_32k).
+    """
+    B, Sq, H, D = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    rep = H // G
+    nchunks = -(-Sk // kv_chunk)
+    pad = nchunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, G, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, kv_chunk, G, D).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq) + q_offset
+    scale = 1.0 / math.sqrt(D)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, (kb, vb) = inp
+        kbh = jnp.repeat(kb, rep, axis=2)             # (B, chunk, H, D)
+        vbh = jnp.repeat(vb, rep, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kbh).astype(jnp.float32) \
+            * scale
+        logits = constrain(logits, DP_AXES, "model", None, None)
+        if logit_softcap > 0:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        kidx = ci * kv_chunk + jnp.arange(kv_chunk)
+        kpos = kidx + k_offset
+        mask = (kidx[None, :] < Sk) & (kpos[None, :] >= 0)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vbh).astype(jnp.float32)
+        acc_new = constrain(acc_new, DP_AXES, "model", None, None)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nchunks), (kc, vc)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3).reshape(B, Sq, H * D)
+
+
+def ffn(x, w1, w3, w2, act="swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ w1) * (x @ w3)
+    else:
+        h = jax.nn.gelu(x @ w1)
+    return h @ w2
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Mean cross-entropy; logits (B,S,V) f32, labels (B,S) int32.
+
+    The gold logit is extracted with a masked sum (not take_along_axis):
+    with vocab TP-sharded, GSPMD turns this into local partial sums + a
+    tiny all-reduce instead of all-gathering the logits.
+    """
+    logz = jax.nn.logsumexp(logits, -1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), -1)
+    return (logz - gold).mean()

@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k, sort-based dispatch.
+
+Covers kimi-k2 (384 routed / top-8 / 1 shared, first layer dense) and
+qwen2-moe (60 routed / top-4 / 4 shared).
+
+Dispatch is the TPU-friendly sort-within-group form (DESIGN.md §5):
+tokens are routed *within their leading group* (a sequence for training,
+a data-parallel shard group for decode), so the argsort and the capacity
+buffer never cross the data-parallel sharding — zero all-to-all in the
+baseline. Expert weights (E, d, f) are FSDP+TP sharded on (d, f); an
+expert-parallel variant (E over the model axis, all-to-all dispatch) is a
+config flag evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import DP_AXES, ArchConfig, ParamDef, constrain
+
+__all__ = ["moe_ffn_defs", "moe_ffn_apply"]
+
+
+def moe_ffn_defs(cfg: ArchConfig) -> dict:
+    d, E, fe = cfg.d_model, cfg.num_experts, cfg.d_expert or cfg.d_ff
+    out = {
+        "router": ParamDef((d, E), ("embed", None), dtype=jnp.float32),
+        "w1": ParamDef((E, d, fe), ("expert", "embed", "mlp")),
+        "w3": ParamDef((E, d, fe), ("expert", "embed", "mlp")),
+        "w2": ParamDef((E, fe, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        fs = fe * cfg.num_shared_experts
+        out["shared"] = {
+            "w1": ParamDef((d, fs), ("embed", "mlp")),
+            "w3": ParamDef((d, fs), ("embed", "mlp")),
+            "w2": ParamDef((fs, d), ("mlp", "embed")),
+        }
+    return out
+
+
+def _dispatch_batched(cfg: ArchConfig, p, x):
+    """Route every row's tokens within the row. x: (B, S, d) -> (B, S, d).
+
+    Fully batched (no vmap) so every intermediate keeps the explicit B
+    leading dim and can be constrained to stay on the data-parallel shard —
+    without the constraints GSPMD replicates the gather/scatter operands
+    across the TP axis (measured: 42 GiB -> ~6 GiB/device on qwen2-moe).
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    TK = S * K
+    C = max(1, int(S * K * cfg.capacity_factor / E))
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # (B, S, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gw, gi = jax.lax.top_k(gates, K)                          # (B, S, K)
+    gw = (gw / jnp.maximum(gw.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    flat_e = gi.reshape(B, TK)                                # (B, TK)
+    order = jnp.argsort(flat_e, axis=-1)                      # stable, per row
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok_of = order // K                                       # (B, TK)
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, TK))
+    counts = jnp.zeros((B, E), jnp.int32).at[rows, sorted_e].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos = (jnp.arange(TK, dtype=jnp.int32)[None]
+           - jnp.take_along_axis(starts, sorted_e, axis=-1))
+    keep = pos < C
+    slot = jnp.where(keep, pos, 0)
+
+    vals = jnp.take_along_axis(x, tok_of[..., None], axis=1)  # (B, TK, d)
+    vals = jnp.where(keep[..., None], vals, 0)
+    vals = constrain(vals, DP_AXES, None, None)
+    buf = jnp.zeros((B, E, C, d), x.dtype).at[rows, sorted_e, slot].add(vals)
+    buf = constrain(buf, DP_AXES, None, None, None)
+    wflat = jnp.take_along_axis(gw.reshape(B, TK), order, axis=-1)
+
+    mesh = _act_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        # §Perf iteration (EXPERIMENTS.md, MoE cells): sink the TP psum of
+        # the w2 contraction through the (linear) slot->token combine, so
+        # the all-reduce moves over (B,S,d) tokens instead of the ~K*cf x
+        # larger (B,E,C,d) slot buffer. GSPMD can't sink reductions through
+        # scatter/gather; shard_map states it explicitly.
+        y = _ffn_combine_shardmap(cfg, p, mesh, buf, sorted_e, slot, keep,
+                                  wflat, tok_of, S)
+    else:
+        h1 = jnp.einsum("becd,edf->becf", buf, p["w1"])
+        h3 = jnp.einsum("becd,edf->becf", buf, p["w3"])
+        h = jax.nn.silu(h1) * h3
+        out_e = jnp.einsum("becf,efd->becd", h, p["w2"])      # (B, E, C, d)
+        gathered = out_e[rows, sorted_e, slot]                # (B, TK, d)
+        gathered = jnp.where(keep[..., None], gathered, 0)
+        y = jnp.zeros((B, S, d), x.dtype).at[
+            rows, tok_of].add(gathered * wflat[..., None])
+    return constrain(y, DP_AXES, None, None)
+
+
+def _act_mesh():
+    from . import common
+    return common._ACT_MESH
+
+
+def _ffn_combine_shardmap(cfg, p, mesh, buf, sorted_e, slot, keep, wflat,
+                          tok_of, S):
+    """Expert FFN + slot->token combine with the TP psum on token space."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    B, E, C, d = buf.shape
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if B % max(dp_size, 1) != 0 or dp_size == 1:
+        dp_spec = None
+
+    def local(buf_l, w1_l, w3_l, w2_l, se_l, slot_l, keep_l, wf_l, tok_l):
+        Bl = buf_l.shape[0]
+        rows_l = jnp.broadcast_to(jnp.arange(Bl)[:, None], se_l.shape)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf_l, w1_l)) \
+            * jnp.einsum("becd,edf->becf", buf_l, w3_l)
+        out_e = jnp.einsum("becf,efd->becd", h, w2_l)   # partial over model
+        g = out_e[rows_l, se_l, slot_l]
+        g = jnp.where(keep_l[..., None], g, 0) * wf_l[..., None]
+        y_part = jnp.zeros((Bl, S, d), buf_l.dtype).at[rows_l, tok_l].add(g)
+        return jax.lax.psum(y_part, "model")
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp_spec, None, None, None),      # buf: rows on DP
+                  P(None, None, "model"),            # w1 (FSDP gather first)
+                  P(None, None, "model"),            # w3
+                  P(None, "model", None),            # w2
+                  P(dp_spec, None), P(dp_spec, None),
+                  P(dp_spec, None), P(dp_spec, None), P(dp_spec, None)),
+        out_specs=P(dp_spec, None, None),
+        check_rep=False)
+    return fn(buf, p["w1"], p["w3"], p["w2"], sorted_e, slot, keep,
+              wflat.astype(buf.dtype), tok_of)
+
+
+def _decode_gather(cfg: ArchConfig, p, x):
+    """One-token decode path: gather the top-k experts' weights per token
+    instead of dispatching tokens to experts — FLOP-minimal (B*k*d*f) and
+    bytes-dominated, which is the true MoE decode regime. x: (B, 1, d)."""
+    B, _, d = x.shape
+    K = cfg.top_k
+    x0 = x[:, 0]
+    logits = x0.astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    gw, gi = jax.lax.top_k(gates, K)                          # (B, K)
+    gw = (gw / jnp.maximum(gw.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+    w1g = constrain(p["w1"][gi], DP_AXES, None, None, "model")  # (B,K,d,f)
+    w3g = constrain(p["w3"][gi], DP_AXES, None, None, "model")
+    w2g = constrain(p["w2"][gi], DP_AXES, None, "model", None)  # (B,K,f,d)
+    h = jnp.einsum("bd,bkdf->bkf", x0, w1g)
+    h = jax.nn.silu(h) * jnp.einsum("bd,bkdf->bkf", x0, w3g)
+    y = jnp.einsum("bkf,bkfd->bd", h * gw[..., None], w2g)
+    return constrain(y, DP_AXES, None)[:, None]
+
+
+def moe_ffn_apply(cfg: ArchConfig, p, x):
+    """x: (B, S, d). Routing groups = rows of the leading batch dim (stay
+    DP-sharded); S == 1 takes the decode weight-gather path."""
+    B, S, d = x.shape
+    if S == 1:
+        y = _decode_gather(cfg, p, x)
+    else:
+        y = _dispatch_batched(cfg, p, x)
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + (jax.nn.silu(x @ sh["w1"]) * (x @ sh["w3"])) @ sh["w2"]
+    return y

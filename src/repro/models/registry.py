@@ -1,0 +1,144 @@
+"""Unified model API: one ModelApi per architecture family.
+
+Every family exposes:
+  param_defs / init_params / abstract_params / axes  — parameters
+  loss_fn(params, batch)                              — training loss
+  prefill(params, batch) -> (logits, caches)          — inference prefill
+  decode_step(params, token, caches, position)        — one-token decode
+  input_specs(shape_kind, ...)                        — ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import rglru, transformer, whisper, xlstm
+from .common import ArchConfig, abstract_params, axes_tree, init_params
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "xlstm": xlstm,
+    "hybrid": rglru,
+    "encdec": whisper,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    mod: Any
+
+    # ---- parameters -------------------------------------------------------
+    def param_defs(self):
+        return self.mod.param_defs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.param_defs(), key, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_defs(), self.cfg.param_dtype)
+
+    def axes(self):
+        return axes_tree(self.param_defs())
+
+    # ---- steps ------------------------------------------------------------
+    def loss_fn(self, params, batch, remat: bool = True):
+        return self.mod.loss_fn(self.cfg, params, batch, remat=remat)
+
+    def forward(self, params, batch, remat: bool = False):
+        return self.mod.forward(self.cfg, params, batch, remat=remat)
+
+    def prefill(self, params, batch):
+        return self.mod.prefill(self.cfg, params, batch)
+
+    def decode_step(self, params, token, caches, position):
+        return self.mod.decode_step(self.cfg, params, token, caches, position)
+
+    # ---- inputs ------------------------------------------------------------
+    def train_inputs(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.num_vision_tokens, cfg.d_model),
+                cfg.param_dtype)
+        if cfg.family == "encdec":
+            # frame embeddings replace tokens on the encoder side (stub)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch_size, min(seq_len, 4096), cfg.d_model), cfg.param_dtype)
+        return specs
+
+    def prefill_inputs(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        specs = {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len),
+                                                jnp.int32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.num_vision_tokens, cfg.d_model),
+                cfg.param_dtype)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch_size, 1500, cfg.d_model), cfg.param_dtype)
+        return specs
+
+    # ---- decode cache specs -------------------------------------------------
+    def abstract_caches(self, batch_size: int, max_seq: int):
+        """ShapeDtypeStructs for the decode state at a given cache length."""
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        G, hd, d = cfg.num_kv_heads, cfg.hd, cfg.d_model
+
+        def kv(length):
+            s = jax.ShapeDtypeStruct((batch_size, length, G, hd), dt)
+            return (s, s)
+
+        caches = []
+        if cfg.family == "xlstm":
+            H = cfg.num_heads
+            hd2 = d // H
+            for l in range(cfg.num_layers):
+                if l % 2 == 0:
+                    caches.append((
+                        jax.ShapeDtypeStruct((batch_size, H, hd2, hd2), dt),
+                        jax.ShapeDtypeStruct((batch_size, H, hd2), dt),
+                        jax.ShapeDtypeStruct((batch_size, H), jnp.float32)))
+                else:
+                    caches.append((
+                        jax.ShapeDtypeStruct((batch_size, d), jnp.float32),
+                        jax.ShapeDtypeStruct((batch_size, d), jnp.float32)))
+        elif cfg.family == "hybrid":
+            w = cfg.rglru_conv_width
+            kv_len = min(max_seq, cfg.window) if cfg.window else max_seq
+            for l in range(cfg.num_layers):
+                if cfg.is_attn_layer(l):
+                    caches.append(kv(kv_len))
+                else:
+                    caches.append((
+                        jax.ShapeDtypeStruct((batch_size, d), jnp.float32),
+                        jax.ShapeDtypeStruct((batch_size, w - 1, d), dt)))
+        elif cfg.family == "encdec":
+            for _ in range(cfg.num_layers):
+                sk, sv = kv(max_seq)
+                ck, cv = kv(1500)
+                caches.append((sk, sv, ck, cv))
+        else:
+            for l in range(cfg.num_layers):
+                if cfg.window and (cfg.global_every <= 0
+                                   or not cfg.is_global_layer(l)):
+                    caches.append(kv(min(max_seq, cfg.window)))
+                else:
+                    caches.append(kv(max_seq))
+        return caches
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    return ModelApi(cfg, _FAMILY_MODULES[cfg.family])

@@ -1,0 +1,275 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention, 1:2.
+
+Layer pattern repeats (recurrent, recurrent, local-attn). The recurrent
+block is: input proj -> short temporal conv -> RG-LRU gated linear
+recurrence -> gated output proj. RG-LRU:
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)           (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan (linear recurrence); decode keeps an
+O(1) state per layer — this is what makes long_500k runnable (DESIGN.md §6).
+Local attention layers use a sliding window (2048) with the shared GQA code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (DP_AXES, ArchConfig, ParamDef, apply_rope, attention,
+                     chunked_attention, constrain, ffn, rms_norm,
+                     softmax_xent)
+
+__all__ = ["param_defs", "loss_fn", "prefill", "decode_step", "forward"]
+
+_C = 8.0
+_FULL_ATTN_LIMIT = 2048 * 2048
+
+
+def _rec_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "wx": ParamDef((d, d), ("embed", "mlp")),
+        "wy": ParamDef((d, d), ("embed", "mlp")),     # gate branch
+        "conv": ParamDef((w, d), (None, "mlp")),
+        "wr": ParamDef((d, d), ("embed", "mlp")),
+        "wi": ParamDef((d, d), ("embed", "mlp")),
+        "lam": ParamDef((d,), ("mlp",), init="normal", scale=0.5),
+        "wout": ParamDef((d, d), ("mlp", "embed")),
+    }
+
+
+def _attn_defs(cfg: ArchConfig) -> dict:
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "wq": ParamDef((d, H * hd), ("embed", "heads")),
+        "wk": ParamDef((d, G * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, G * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((H * hd, d), ("heads", "embed")),
+    }
+
+
+def _ffn_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "w1": ParamDef((d, cfg.d_ff), ("embed", "mlp")),
+        "w3": ParamDef((d, cfg.d_ff), ("embed", "mlp")),
+        "w2": ParamDef((cfg.d_ff, d), ("mlp", "embed")),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    layers = []
+    for l in range(cfg.num_layers):
+        blk = {"ffn": _ffn_defs(cfg)}
+        if cfg.is_attn_layer(l):
+            blk["attn"] = _attn_defs(cfg)
+        else:
+            blk["rec"] = _rec_defs(cfg)
+        layers.append(blk)
+    return {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0),
+        "layers": layers,
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# --------------------------- RG-LRU block ---------------------------------
+
+def _rglru_gates(p, xn):
+    r = jax.nn.sigmoid((xn @ p["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xn @ p["wi"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i
+    return a, gated
+
+
+def _conv1d(p, x, state=None):
+    """Short causal temporal conv. x: (B, S, d). state: (B, w-1, d) or None."""
+    w = p["conv"].shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, k:k + x.shape[1]] * p["conv"][k] for k in range(w))
+    new_state = xp[:, -(w - 1):] if w > 1 else None
+    return out, new_state
+
+
+def _rec_block(cfg: ArchConfig, p, x, state=None):
+    """Returns (out, (h_last, conv_state))."""
+    xn = rms_norm(x, p["ln"])
+    u = xn @ p["wx"]
+    gate = jax.nn.gelu(xn @ p["wy"])
+    conv_state = state[1] if state is not None else None
+    u, new_conv = _conv1d(p, u, conv_state)
+    a, gated = _rglru_gates(p, xn)
+    b = gated * u.astype(jnp.float32)
+    if x.shape[1] == 1 and state is not None:  # decode fast path
+        h_prev = state[0]
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None]
+        h_last = h
+    else:
+        if state is not None:
+            # seed the scan with the carried state via a virtual step
+            b = b.at[:, 0].add(a[:, 0] * state[0])
+        _, hs = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, b), axis=1)[0:2]
+        h_last = hs[:, -1]
+    out = (hs.astype(x.dtype) * gate) @ p["wout"]
+    return out, (h_last, new_conv)
+
+
+def _attn_block(cfg: ArchConfig, p, x, positions, q_offset=0, kv_cache=None):
+    B, S, _ = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    xn = rms_norm(x, p["ln"])
+    q = (xn @ p["wq"]).reshape(B, S, H, hd)
+    k = (xn @ p["wk"]).reshape(B, S, G, hd)
+    v = (xn @ p["wv"]).reshape(B, S, G, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), q_offset, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), q_offset, 1)
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    else:
+        new_cache = (k, v)
+    fn = attention if q.shape[1] * k.shape[1] <= _FULL_ATTN_LIMIT else chunked_attention
+    out = fn(q, k.astype(q.dtype), v.astype(q.dtype), causal=True,
+             window=cfg.window, q_offset=q_offset)
+    return out @ p["wo"], new_cache
+
+
+def _attn_decode_windowed(cfg: ArchConfig, p, x, position, kv_cache):
+    """One-token decode against a W-sized *shift* cache (oldest key drops
+    off the front every step). Keys live at absolute positions
+    position-W+1 .. position; negative positions are masked inside
+    attention()."""
+    B = x.shape[0]
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    xn = rms_norm(x, p["ln"])
+    q = (xn @ p["wq"]).reshape(B, 1, H, hd)
+    k = (xn @ p["wk"]).reshape(B, 1, G, hd)
+    v = (xn @ p["wv"]).reshape(B, 1, G, hd)
+    positions = jnp.broadcast_to(jnp.asarray(position, jnp.int32)[None, None],
+                                 (B, 1))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    ck, cv = kv_cache
+    W = ck.shape[1]
+    ck = jnp.concatenate([ck[:, 1:], k.astype(ck.dtype)], axis=1)
+    cv = jnp.concatenate([cv[:, 1:], v.astype(cv.dtype)], axis=1)
+    k_offset = jnp.asarray(position, jnp.int32) - W + 1
+    out = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                    window=cfg.window, q_offset=position, k_offset=k_offset)
+    return out @ p["wo"], (ck, cv)
+
+
+def _layer(cfg, l, p, x, positions, q_offset=0, cache=None):
+    if "attn" in p:
+        h, new_cache = _attn_block(cfg, p["attn"], x, positions,
+                                   q_offset=q_offset, kv_cache=cache)
+    else:
+        h, new_cache = _rec_block(cfg, p["rec"], x, state=cache)
+    x = x + h
+    f = p["ffn"]
+    x = x + ffn(rms_norm(x, f["ln"]), f["w1"], f["w3"], f["w2"], "swiglu")
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    x = params["embed"][batch["tokens"]].astype(cfg.param_dtype)
+    x = constrain(x, DP_AXES, None, None)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for l, p in enumerate(params["layers"]):
+        if remat:
+            x = jax.checkpoint(
+                lambda p_, x_, _l=l: _layer(cfg, _l, p_, x_, positions)[0])(p, x)
+        else:
+            x, _ = _layer(cfg, l, p, x, positions)
+    x = rms_norm(x, params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return constrain(logits, DP_AXES, None, "model")
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    logits = forward(cfg, params, batch, remat=remat)
+    return softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+
+def init_caches(cfg: ArchConfig, B: int, max_seq: int, dtype):
+    """Attention layers: windowed KV cache (capped at cfg.window — the whole
+    point of local attention); recurrent layers: (h, conv) state."""
+    caches = []
+    G, hd, d = cfg.num_kv_heads, cfg.hd, cfg.d_model
+    w = cfg.rglru_conv_width
+    kv_len = min(max_seq, cfg.window) if cfg.window else max_seq
+    for l in range(cfg.num_layers):
+        if cfg.is_attn_layer(l):
+            caches.append((jnp.zeros((B, kv_len, G, hd), dtype),
+                           jnp.zeros((B, kv_len, G, hd), dtype)))
+        else:
+            caches.append((jnp.zeros((B, d), jnp.float32),
+                           jnp.zeros((B, w - 1, d), dtype)))
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    x = params["embed"][batch["tokens"]].astype(cfg.param_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    caches = []
+    W = cfg.window or S
+    for l, p in enumerate(params["layers"]):
+        x, c = _layer(cfg, l, p, x, positions)
+        if "attn" in p:
+            # keep only the last W keys as a shift cache (left-pad if short;
+            # padded slots sit at negative absolute positions -> masked)
+            ck, cv = c
+            take = min(S, W)
+            ck = ck[:, S - take:]
+            cv = cv[:, S - take:]
+            if take < W:
+                ck = jnp.pad(ck, ((0, 0), (W - take, 0), (0, 0), (0, 0)))
+                cv = jnp.pad(cv, ((0, 0), (W - take, 0), (0, 0), (0, 0)))
+            c = (ck.astype(cfg.param_dtype), cv.astype(cfg.param_dtype))
+        caches.append(c)
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    return (x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32))[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, position):
+    """Window-capped decode: attention caches are ring buffers of size W."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None].astype(cfg.param_dtype)
+    positions = jnp.broadcast_to(jnp.asarray(position, jnp.int32)[None, None],
+                                 (B, 1))
+    new_caches = []
+    for l, p in enumerate(params["layers"]):
+        if "attn" in p:
+            # shift cache: always holds the last W keys in order
+            h, c = _attn_decode_windowed(cfg, p["attn"], x, position,
+                                         caches[l])
+            x = x + h
+            new_caches.append(c)
+        else:
+            h, c = _rec_block(cfg, p["rec"], x, state=caches[l])
+            x = x + h
+            new_caches.append(c)
+        f = p["ffn"]
+        x = x + ffn(rms_norm(x, f["ln"]), f["w1"], f["w3"], f["w2"], "swiglu")
+    x = rms_norm(x, params["ln_f"])
+    return (x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32))[:, 0], new_caches

@@ -1,0 +1,370 @@
+"""Decoder-only transformer backbone: dense, MoE, and VLM variants.
+
+Covers kimi-k2-1t-a32b, qwen2-moe-a2.7b, chatglm3-6b, phi4-mini-3.8b,
+mistral-nemo-12b, gemma3-4b (5:1 local:global windows) and the qwen2-vl-72b
+backbone (M-RoPE + stub vision prefix).
+
+Everything is pure jnp so the dry-run's cost_analysis sees every FLOP
+(DESIGN.md §3). Layers are materialized as per-layer parameter lists and
+applied with a Python loop + optional jax.checkpoint — unrolled HLO makes
+the roofline exact (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (DP_AXES, ArchConfig, ParamDef, apply_mrope, apply_rope,
+                     attention, chunked_attention, constrain, ffn, rms_norm,
+                     softmax_xent)
+from .moe import moe_ffn_defs, moe_ffn_apply
+
+# attention score materialization is capped; larger S*K uses the chunked
+# (online-softmax) path. 2048^2 keeps the score slab shardable even when
+# kv_heads < TP width (GQA scores carry the G axis, which often can't take
+# the model axis; the chunk scan bounds the live slab instead).
+_FULL_ATTN_LIMIT = 2048 * 2048
+
+
+def _attn_defs(cfg: ArchConfig) -> dict:
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, H * hd), ("embed", "heads")),
+        "wk": ParamDef((d, G * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, G * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((H * hd, d), ("heads", "embed")),
+    }
+
+
+def _ffn_defs(cfg: ArchConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.act == "swiglu":
+        return {
+            "w1": ParamDef((d, d_ff), ("embed", "mlp")),
+            "w3": ParamDef((d, d_ff), ("embed", "mlp")),
+            "w2": ParamDef((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w1": ParamDef((d, d_ff), ("embed", "mlp")),
+        "w2": ParamDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def layer_defs(cfg: ArchConfig, layer: int) -> dict:
+    out = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": _attn_defs(cfg),
+    }
+    if cfg.is_moe_layer(layer):
+        out["moe"] = moe_ffn_defs(cfg)
+    else:
+        out["ffn"] = _ffn_defs(cfg, cfg.d_ff)
+    return out
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0),
+        "layers": [layer_defs(cfg, l) for l in range(cfg.num_layers)],
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scan-layers (stacked) layout — homogeneous-layer archs (MoE giants)
+#
+# Unrolled HLO at 61 MoE layers takes XLA's SPMD partitioner an hour on this
+# host; the production program scans one stacked layer block instead
+# (compile time ~L/period x smaller). Roofline FLOPs for scanned cells use
+# the hybrid accounting in launch/dryrun.py (scan program counts the body
+# once; a standalone per-layer jit supplies the per-iteration cost).
+# ---------------------------------------------------------------------------
+
+def _stack_defs(d, n):
+    return jax.tree.map(
+        lambda pd: ParamDef((n,) + pd.shape, (None,) + pd.axes,
+                            init=pd.init, scale=pd.scale, dtype=pd.dtype),
+        d, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stacked_param_defs(cfg: ArchConfig) -> dict:
+    """first_k_dense layers stay unrolled; the homogeneous tail is stacked.
+    Requires every remaining layer to share structure."""
+    kinds = [cfg.is_moe_layer(l) for l in range(cfg.first_k_dense,
+                                                cfg.num_layers)]
+    assert all(k == kinds[0] for k in kinds), \
+        "stacked layout needs a homogeneous layer tail"
+    n_tail = cfg.num_layers - cfg.first_k_dense
+    return {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0),
+        "head_layers": [layer_defs(cfg, l) for l in range(cfg.first_k_dense)],
+        "stack": _stack_defs(layer_defs(cfg, cfg.first_k_dense), n_tail),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def forward_scanned(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = (_mrope_positions(cfg, B, S) if cfg.mrope_sections
+                 else _positions(cfg, B, S))
+    for l, p in enumerate(params["head_layers"]):
+        x, _ = _block(cfg, p, x, positions, layer=l)
+    rep = cfg.first_k_dense  # representative layer index for the tail
+
+    def body(x_, p_):
+        fn = lambda pp, xx: _block(cfg, pp, xx, positions, layer=rep)[0]
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(p_, x_), None
+
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    x = rms_norm(x, params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return constrain(logits, DP_AXES, None, "model")
+
+
+def loss_fn_scanned(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    logits = forward_scanned(cfg, params, batch, remat=remat)
+    return softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+
+def layer_fwdbwd_probe(cfg: ArchConfig, layer: int):
+    """Standalone (params, x, positions) -> grads for ONE layer — jitted by
+    the dry-run to recover per-layer FLOPs/bytes for scanned programs."""
+    def fn(p, x, positions):
+        def f(p_, x_):
+            return (_block(cfg, p_, x_, positions, layer=layer)[0]
+                    .astype(jnp.float32) ** 2).sum()
+        g = jax.grad(f, argnums=(0, 1))(p, x)
+        return g
+    return fn
+
+
+def params_to_stacked(cfg: ArchConfig, params):
+    """Per-layer checkpoint layout -> stacked layout (and back below)."""
+    tail = params["layers"][cfg.first_k_dense:]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *tail)
+    return {"embed": params["embed"],
+            "head_layers": params["layers"][:cfg.first_k_dense],
+            "stack": stack, "ln_f": params["ln_f"],
+            "unembed": params["unembed"]}
+
+
+def stacked_to_params(cfg: ArchConfig, sp):
+    n = cfg.num_layers - cfg.first_k_dense
+    tail = [jax.tree.map(lambda x: x[i], sp["stack"]) for i in range(n)]
+    return {"embed": sp["embed"],
+            "layers": list(sp["head_layers"]) + tail,
+            "ln_f": sp["ln_f"], "unembed": sp["unembed"]}
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ArchConfig, B: int, S: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (B, S))
+
+
+def _mrope_positions(cfg: ArchConfig, B: int, S: int, offset=0):
+    """Stub M-RoPE ids: vision prefix gets a (t=0, h, w) grid, text advances
+    all three streams together (qwen2-vl convention, frontend stubbed)."""
+    P = cfg.num_vision_tokens
+    side = max(1, int(P ** 0.5))
+    t_ids = jnp.where(jnp.arange(S) < P, 0, jnp.arange(S) - P + 1)
+    h_ids = jnp.where(jnp.arange(S) < P, jnp.arange(S) // side,
+                      jnp.arange(S) - P + 1)
+    w_ids = jnp.where(jnp.arange(S) < P, jnp.arange(S) % side,
+                      jnp.arange(S) - P + 1)
+    pos3 = jnp.stack([t_ids, h_ids, w_ids]).astype(jnp.int32) + offset
+    return jnp.broadcast_to(pos3[:, None, :], (3, B, S))
+
+
+def _rotate(cfg: ArchConfig, q, k, positions):
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k
+
+
+def _layer_window(cfg: ArchConfig, layer: int) -> int:
+    """Effective sliding window for this layer (0 = full attention)."""
+    if cfg.global_every > 0:  # gemma3 local:global pattern
+        return 0 if cfg.is_global_layer(layer) else cfg.window
+    return cfg.window
+
+
+def _self_attn(cfg: ArchConfig, p, x, positions, *, layer: int, q_offset=0,
+               kv_cache=None, window_override=None):
+    """Returns (out, new_kv). kv_cache: (k, v) with layout (B, Sk, G, hd).
+
+    Decode caches shorter than the timeline are *shift* caches (local
+    windowed layers — §Perf gemma3 long_500k iteration): the oldest key
+    drops off the front and keys live at absolute positions
+    q_offset-W+1..q_offset (k_offset masks the unfilled prefix).
+    """
+    B, S, _ = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, G, hd)
+    v = (x @ p["wv"]).reshape(B, S, G, hd)
+    q, k = _rotate(cfg, q, k, positions)
+    window = _layer_window(cfg, layer) if window_override is None \
+        else window_override
+    k_offset = 0
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        W = ck.shape[1]
+        if S == 1 and window > 0 and W <= window:
+            # shift cache: holds exactly the last W roped keys in order
+            ck = jnp.concatenate([ck[:, 1:], k.astype(ck.dtype)], axis=1)
+            cv = jnp.concatenate([cv[:, 1:], v.astype(cv.dtype)], axis=1)
+            k_offset = jnp.asarray(q_offset, jnp.int32) - W + 1
+        else:
+            # full cache: write at q_offset (preallocated timeline)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), q_offset, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), q_offset, 1)
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    else:
+        new_cache = (k, v)
+    attn_fn = attention if q.shape[1] * k.shape[1] <= _FULL_ATTN_LIMIT \
+        else chunked_attention
+    out = attn_fn(q, k.astype(q.dtype), v.astype(q.dtype), causal=True,
+                  window=window, q_offset=q_offset, k_offset=k_offset,
+                  logit_softcap=cfg.logit_softcap)
+    return out @ p["wo"], new_cache
+
+
+def _block(cfg: ArchConfig, p, x, positions, *, layer: int, q_offset=0,
+           kv_cache=None):
+    h, new_cache = _self_attn(cfg, p["attn"], rms_norm(x, p["ln1"]), positions,
+                              layer=layer, q_offset=q_offset, kv_cache=kv_cache)
+    x = x + h
+    hin = rms_norm(x, p["ln2"])
+    if "moe" in p:
+        x = x + moe_ffn_apply(cfg, p["moe"], hin)
+    else:
+        x = x + ffn(hin, p["ffn"]["w1"], p["ffn"].get("w3"),
+                    p["ffn"]["w2"], cfg.act)
+    return x, new_cache
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch):
+    x = params["embed"][batch["tokens"]].astype(cfg.param_dtype)
+    x = constrain(x, DP_AXES, None, None)
+    if cfg.num_vision_tokens > 0:
+        P = cfg.num_vision_tokens
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, P:]], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    """Full-sequence forward -> logits (B, S, V) in f32."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = (_mrope_positions(cfg, B, S) if cfg.mrope_sections
+                 else _positions(cfg, B, S))
+
+    for l, p in enumerate(params["layers"]):
+        blk = functools.partial(_block, cfg, layer=l)
+        if remat:
+            blk = jax.checkpoint(
+                lambda p_, x_, pos_, _l=l: _block(cfg, p_, x_, pos_, layer=_l)[0])
+            x = blk(p, x, positions)
+        else:
+            x, _ = _block(cfg, p, x, positions, layer=l)
+    x = rms_norm(x, params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return constrain(logits, DP_AXES, None, "model")
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    logits = forward(cfg, params, batch, remat=remat)
+    return softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Forward + return per-layer KV caches and last-position logits.
+
+    Windowed (local) layers keep only their last W keys as a shift cache —
+    the 5:1 local:global memory win for gemma3 (DESIGN.md §6)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = (_mrope_positions(cfg, B, S) if cfg.mrope_sections
+                 else _positions(cfg, B, S))
+    from .common import tp_divides
+    tp_on_heads = tp_divides(cfg.num_kv_heads)
+    caches = []
+    for l, p in enumerate(params["layers"]):
+        x, kv = _block(cfg, p, x, positions, layer=l)
+        W = _layer_window(cfg, l)
+        if W and S >= W:
+            kv = (kv[0][:, S - W:], kv[1][:, S - W:])
+        elif W:
+            kv = (jnp.pad(kv[0], ((0, 0), (W - S, 0), (0, 0), (0, 0))),
+                  jnp.pad(kv[1], ((0, 0), (W - S, 0), (0, 0), (0, 0))))
+        if not W:
+            # pin the per-layer cache to its serving layout immediately —
+            # without this XLA holds all L layers' caches at the producer
+            # sharding (measured 280 GiB/device on vl-72b prefill_32k)
+            if tp_on_heads:
+                kv = (constrain(kv[0], DP_AXES, None, "model", None),
+                      constrain(kv[1], DP_AXES, None, "model", None))
+            else:
+                kv = (constrain(kv[0], DP_AXES, "model", None, None),
+                      constrain(kv[1], DP_AXES, "model", None, None))
+        caches.append(kv)
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, position: jax.Array):
+    """One decode step against preallocated KV caches.
+
+    token: (B,) int32; caches: list of (k, v) each (B, S_max, G, hd);
+    position: scalar int32 current write index.
+    Returns (logits (B, V), new caches).
+    """
+    B = token.shape[0]
+    x = params["embed"][token][:, None].astype(cfg.param_dtype)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(
+            jnp.asarray(position, jnp.int32)[None, None, None], (3, B, 1))
+        positions = pos3
+    else:
+        positions = jnp.broadcast_to(
+            jnp.asarray(position, jnp.int32)[None, None], (B, 1))
+    new_caches = []
+    for l, p in enumerate(params["layers"]):
+        x_n = rms_norm(x, p["ln1"])
+        h, kv = _self_attn(cfg, p["attn"], x_n, positions, layer=l,
+                           q_offset=position, kv_cache=caches[l])
+        x = x + h
+        hin = rms_norm(x, p["ln2"])
+        if "moe" in p:
+            x = x + moe_ffn_apply(cfg, p["moe"], hin)
+        else:
+            w3 = p["ffn"].get("w3")
+            x = x + ffn(hin, p["ffn"]["w1"], w3, p["ffn"]["w2"], cfg.act)
+        new_caches.append(kv)
+    x = rms_norm(x, params["ln_f"])
+    logits = (x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32))
+    return logits[:, 0], new_caches

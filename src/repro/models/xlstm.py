@@ -1,0 +1,287 @@
+"""xLSTM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+xlstm-125m: 12 layers, d=768, 4 heads, no separate FFN (d_ff=0) — the
+blocks carry their own gated up/down projections.
+
+TPU adaptation (DESIGN.md §3):
+  * mLSTM training uses the paper's *parallel form* — a decay-masked
+    attention built from cumulative log-forget-gates (quadratic in S, like
+    the paper's own training mode) — and the O(1)-state *recurrent form*
+    (C, n, m) for decode, which is what makes the long_500k cell runnable.
+  * sLSTM is a stabilized elementwise linear recurrence, trained with
+    jax.lax.associative_scan (Blelloch), decoded step-recurrently.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import (DP_AXES, ArchConfig, ParamDef, constrain, rms_norm,
+                     softmax_xent)
+
+__all__ = ["param_defs", "loss_fn", "prefill", "decode_step", "forward"]
+
+
+def _mlstm_defs(cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "wq": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wi": ParamDef((d, H), ("embed", None)),   # input gate (per head)
+        "wf": ParamDef((d, H), ("embed", None)),   # forget gate (per head)
+        "wo": ParamDef((d, d), ("heads", "embed")),
+        "wog": ParamDef((d, d), ("embed", "heads")),  # output gate proj
+    }
+
+
+def _slstm_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "wz": ParamDef((d, d), ("embed", "mlp")),
+        "wi": ParamDef((d, d), ("embed", "mlp")),
+        "wf": ParamDef((d, d), ("embed", "mlp")),
+        "wo": ParamDef((d, d), ("embed", "mlp")),
+        "wdown": ParamDef((d, d), ("mlp", "embed")),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    layers = []
+    for l in range(cfg.num_layers):
+        if l % 2 == 0:
+            layers.append({"kind_mlstm": _mlstm_defs(cfg)})
+        else:
+            layers.append({"kind_slstm": _slstm_defs(cfg)})
+    return {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0),
+        "layers": layers,
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# --------------------------- mLSTM ----------------------------------------
+
+_MLSTM_CHUNK = 256
+
+
+def _mlstm_parallel(cfg: ArchConfig, p, x):
+    """Chunkwise-parallel training form (xLSTM paper's training mode):
+    intra-chunk decay-masked attention + inter-chunk recurrent (C, n, m)
+    state carried by lax.scan. Linear in S with quadratic chunks.
+    x: (B, S, d)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    L = min(_MLSTM_CHUNK, S)
+    pad = (-S) % L
+    xn = rms_norm(x, p["ln"])
+    q = (xn @ p["wq"]).reshape(B, S, H, hd)
+    k = (xn @ p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (xn @ p["wv"]).reshape(B, S, H, hd)
+    logf = jax.nn.log_sigmoid((xn @ p["wf"]).astype(jnp.float32))  # (B,S,H)
+    logi = (xn @ p["wi"]).astype(jnp.float32)
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    NC = (S + pad) // L
+
+    def to_chunks(t):
+        return t.reshape((B, NC, L) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(to_chunks, (q, k, v))      # (NC, B, L, H, hd)
+    fc, ic = map(to_chunks, (logf, logi))       # (NC, B, L, H)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                         # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, fb, ib = inp
+        b = jnp.cumsum(fb, axis=1)              # (B, L, H) inclusive
+        F = b[:, -1]                            # (B, H) chunk decay total
+        # stabilizers
+        runmax = jax.lax.cummax(ib - b, axis=1)         # (B, L, H)
+        m_i = jnp.maximum(b + m[:, None], b + runmax)   # (B, L, H)
+        # intra-chunk: D_ij = b_i - b_j + i_j - m_i  (j <= i)
+        Dm = (b[:, :, None] - b[:, None, :] + ib[:, None, :]
+              - m_i[:, :, None])                        # (B, L, L, H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        Dexp = jnp.where(causal[None, :, :, None], jnp.exp(Dm), 0.0)
+        scores = jnp.einsum("blhd,bshd->blsh", qb, kb).astype(jnp.float32) * Dexp
+        inter_scale = jnp.exp(b + m[:, None] - m_i)     # (B, L, H)
+        num = jnp.einsum("blsh,bshd->blhd", scores, vb.astype(jnp.float32))
+        num += inter_scale[..., None] * jnp.einsum(
+            "blhd,bhdv->blhv", qb.astype(jnp.float32), C)
+        # n_i = sum_j Dexp_ij k_j + inter_scale * n_prev
+        n_i = jnp.einsum("blsh,bshd->blhd", Dexp, kb.astype(jnp.float32)) \
+            + inter_scale[..., None] * n[:, None]
+        den = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh",
+                                             qb.astype(jnp.float32), n_i)),
+                          jnp.exp(-m_i))
+        h = (num / den[..., None])
+        # state update to end of chunk
+        m_new = F + jnp.maximum(m, jnp.max(ib - b, axis=1))
+        w_j = jnp.exp(F[:, None] - b + ib - m_new[:, None])   # (B, L, H)
+        C_new = jnp.exp(F + m - m_new)[..., None, None] * C + jnp.einsum(
+            "blh,blhd,blhv->bhdv", w_j, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n_new = jnp.exp(F + m - m_new)[..., None] * n + jnp.einsum(
+            "blh,blhd->bhd", w_j, kb.astype(jnp.float32))
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, fc, ic))
+    h = hs.swapaxes(0, 1).reshape(B, S + pad, H, hd)[:, :S]
+    h = h.astype(x.dtype).reshape(B, S, d)
+    og = jax.nn.sigmoid(xn @ p["wog"])
+    return (h * og) @ p["wo"]
+
+
+def _mlstm_decode(cfg: ArchConfig, p, x, state):
+    """Recurrent form. x: (B, 1, d); state = (C, n, m) with
+    C: (B, H, hd, hd), n: (B, H, hd), m: (B, H)."""
+    B, _, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    C, n, m = state
+    xn = rms_norm(x[:, 0], p["ln"])
+    q = (xn @ p["wq"]).reshape(B, H, hd)
+    k = (xn @ p["wk"]).reshape(B, H, hd) / math.sqrt(hd)
+    v = (xn @ p["wv"]).reshape(B, H, hd)
+    logf = jax.nn.log_sigmoid((xn @ p["wf"]).astype(jnp.float32))  # (B,H)
+    logi = (xn @ p["wi"]).astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    fg = jnp.exp(logf + m - m_new)[..., None]
+    ig = jnp.exp(logi - m_new)[..., None]
+    Cf = C.astype(jnp.float32)
+    nf = n.astype(jnp.float32)
+    C_new = fg[..., None] * Cf + (ig * v.astype(jnp.float32))[..., :, None] \
+        * k.astype(jnp.float32)[..., None, :]
+    n_new = fg * nf + ig * k.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(x.dtype).reshape(B, d)
+    og = jax.nn.sigmoid(xn @ p["wog"])
+    out = ((h * og) @ p["wo"])[:, None]
+    return out, (C_new.astype(C.dtype), n_new.astype(n.dtype), m_new)
+
+
+# --------------------------- sLSTM ----------------------------------------
+
+def _slstm_scan(cfg: ArchConfig, p, x):
+    """Training form: stabilized elementwise linear recurrence via
+    associative_scan. x: (B, S, d)."""
+    xn = rms_norm(x, p["ln"])
+    z = jnp.tanh(xn @ p["wz"]).astype(jnp.float32)
+    logi = (xn @ p["wi"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((xn @ p["wf"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(xn @ p["wo"])
+    # c_t = f c_{t-1} + i z ; n_t = f n_{t-1} + i   (stabilized by m_t)
+    # associative linear recurrence on (a, b): y_t = a_t y_{t-1} + b_t
+
+    def combine(l, r):
+        al, bl, nl = l
+        ar, br, nr = r
+        return al * ar, ar * bl + br, ar * nl + nr
+
+    a = jnp.exp(logf)  # safe: log_sigmoid <= 0 -> a in (0, 1]
+    i = jnp.exp(jnp.minimum(logi, 10.0))
+    # scan c_t and n_t together: both share the decay a_t
+    _, c_t = jax.lax.associative_scan(
+        lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, i * z), axis=1)[0:2]
+    _, n_t = jax.lax.associative_scan(
+        lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, i), axis=1)[0:2]
+    h = (c_t / jnp.maximum(n_t, 1e-6)).astype(x.dtype)
+    return (h * o) @ p["wdown"]
+
+
+def _slstm_decode(cfg: ArchConfig, p, x, state):
+    """state = (c, n): (B, d) each."""
+    c, n = state
+    xn = rms_norm(x[:, 0], p["ln"])
+    z = jnp.tanh(xn @ p["wz"]).astype(jnp.float32)
+    i = jnp.exp(jnp.minimum((xn @ p["wi"]).astype(jnp.float32), 10.0))
+    f = jax.nn.sigmoid((xn @ p["wf"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(xn @ p["wo"])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h = (c_new / jnp.maximum(n_new, 1e-6)).astype(x.dtype)
+    return ((h * o) @ p["wdown"])[:, None], (c_new, n_new)
+
+
+# --------------------------- model ----------------------------------------
+
+def _apply_layer(cfg, p, x):
+    if "kind_mlstm" in p:
+        return x + _mlstm_parallel(cfg, p["kind_mlstm"], x)
+    return x + _slstm_scan(cfg, p["kind_slstm"], x)
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    x = params["embed"][batch["tokens"]].astype(cfg.param_dtype)
+    x = constrain(x, DP_AXES, None, None)
+    for p in params["layers"]:
+        f = jax.checkpoint(lambda p_, x_: _apply_layer(cfg, p_, x_)) \
+            if remat else (lambda p_, x_: _apply_layer(cfg, p_, x_))
+        x = f(p, x)
+    x = rms_norm(x, params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return constrain(logits, DP_AXES, None, "model")
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    logits = forward(cfg, params, batch, remat=remat)
+    return softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+
+
+def init_state(cfg: ArchConfig, B: int, dtype):
+    """Per-layer recurrent decode state."""
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    states = []
+    for l in range(cfg.num_layers):
+        if l % 2 == 0:
+            states.append((jnp.zeros((B, H, hd, hd), dtype),
+                           jnp.zeros((B, H, hd), dtype),
+                           jnp.full((B, H), -1e30, jnp.float32)))
+        else:
+            states.append((jnp.zeros((B, cfg.d_model), jnp.float32),
+                           jnp.zeros((B, cfg.d_model), jnp.float32)))
+    return states
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Stateless stress prefill: forward for logits + fresh decode state.
+
+    (The recurrent state could be produced by a scan over the prompt; for
+    the dry-run cells the forward pass dominates and state init is O(1).)"""
+    logits = forward(cfg, params, batch, remat=False)
+    B = batch["tokens"].shape[0]
+    return logits[:, -1], init_state(cfg, B, cfg.param_dtype)
+
+
+def decode_step(cfg: ArchConfig, params, token, states, position):
+    B = token.shape[0]
+    x = params["embed"][token][:, None].astype(cfg.param_dtype)
+    new_states = []
+    for p, st in zip(params["layers"], states):
+        if "kind_mlstm" in p:
+            h, st2 = _mlstm_decode(cfg, p["kind_mlstm"], x, st)
+        else:
+            h, st2 = _slstm_decode(cfg, p["kind_slstm"], x, st)
+        x = x + h
+        new_states.append(st2)
+    x = rms_norm(x, params["ln_f"])
+    logits = x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return logits[:, 0], new_states

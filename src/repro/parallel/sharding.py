@@ -1,0 +1,157 @@
+"""Logical-axis -> mesh-axis sharding rules (FSDP + TP, divisibility-aware).
+
+Parameters declare logical axes (models/common.ParamDef); this module maps
+them onto the production mesh:
+
+  embed           -> FSDP over ("pod", "data")   (ZeRO-3 style)
+  heads/kv_heads/
+  mlp/vocab       -> tensor-parallel over "model"
+  expert          -> replicated in the baseline; "model" under
+                     expert-parallelism (--moe-ep, evaluated in §Perf)
+
+Every rule is divisibility-checked against the actual dimension: if a dim
+does not divide by the mesh-axes product the rule degrades gracefully
+(drop trailing axes, then give up to None) instead of relying on GSPMD
+padding. kv_heads smaller than the TP width therefore replicate, and the
+KV-cache *sequence* axis picks up the TP sharding instead (flash-decode
+style) — see kv_cache_spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "make_rules", "params_sharding", "batch_spec",
+           "kv_cache_sharding", "mesh_axis_size"]
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: dict[str, Any], dp_axes):
+        self.mesh = mesh
+        self.rules = rules
+        self.dp_axes = dp_axes  # axes the batch is sharded over
+
+    def _fit(self, dim: int, axes) -> Optional[Any]:
+        """Return axes (possibly shortened) that evenly divide dim.
+
+        Axis tuples are ordered smallest-first (("pod","data")): when the
+        full product doesn't divide, drop the *leading* (small) axes so the
+        fallback keeps the widest parallelism (e.g. 16 rows on a 2x16
+        ("pod","data") axis shard 16-way over "data", not 2-way over "pod").
+        """
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(axes)
+        while axes:
+            if dim % mesh_axis_size(self.mesh, axes) == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[1:]
+        return None
+
+    def spec_for(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> P:
+        used: set[str] = set()
+        out = []
+        for dim, name in zip(shape, logical):
+            axes = self.rules.get(name) if name else None
+            axes = self._fit(dim, axes)
+            # a mesh axis may appear only once per spec
+            if axes is not None:
+                flat = (axes,) if isinstance(axes, str) else tuple(axes)
+                if any(a in used for a in flat):
+                    axes = None
+                else:
+                    used.update(flat)
+            out.append(axes)
+        return P(*out)
+
+
+def make_rules(mesh: Mesh, *, moe_ep: bool = False) -> ShardingRules:
+    """Default FSDP+TP rules for this mesh (single- or multi-pod)."""
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    rules = {
+        "embed": fsdp,
+        "vocab": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "mlp": tp,
+        "expert": tp if moe_ep else None,
+    }
+    if moe_ep:
+        # expert-parallel: experts over "model"; expert matrices FSDP only
+        rules = dict(rules, expert=tp, mlp=fsdp)
+    return ShardingRules(mesh, rules, dp_axes=fsdp)
+
+
+def params_sharding(rules: ShardingRules, abstract_params, axes_tree):
+    """NamedSharding pytree matching the abstract parameter tree."""
+    def one(p, axes):
+        return NamedSharding(rules.mesh, rules.spec_for(p.shape, axes))
+    return jax.tree.map(one, abstract_params, axes_tree)
+
+
+def batch_spec(rules: ShardingRules, abstract_batch):
+    """Input batch: leading (batch) dim over the DP axes when divisible."""
+    def one(x):
+        b = x.shape[0]
+        axes = rules._fit(b, rules.dp_axes)
+        return NamedSharding(rules.mesh,
+                             P(*([axes] + [None] * (x.ndim - 1))))
+    return jax.tree.map(one, abstract_batch)
+
+
+def kv_cache_sharding(rules: ShardingRules, abstract_caches):
+    """Decode caches. 4D KV tensors (B, S, G, hd): batch over DP when
+    divisible; G over TP when divisible, otherwise the *sequence* axis picks
+    up TP (flash-decode; GSPMD inserts the softmax combine collectives).
+    Low-rank recurrent states (B, ...): batch over DP, rest replicated/TP.
+    """
+    mesh = rules.mesh
+    tp = rules.rules.get("heads")
+
+    def one(x):
+        bdim = x.shape[0]
+        baxes = rules._fit(bdim, rules.dp_axes)
+        if x.ndim == 4:
+            B, S, G, hd = x.shape
+            gaxes = rules._fit(G, tp)
+            if gaxes is None and S < 8192:
+                # small (window-capped) caches: replication beats the
+                # resharding traffic of a TP-sharded shift cache (§Perf 3b)
+                return NamedSharding(mesh, P(baxes, None, None, None))
+            if gaxes is None:
+                saxes = rules._fit(S, tp)
+                if baxes is None and saxes is not None:
+                    # long-context bs=1: spread the sequence over everything
+                    all_axes = rules._fit(S, tuple(
+                        a for a in (*((rules.dp_axes,) if isinstance(
+                            rules.dp_axes, str) else rules.dp_axes), tp)
+                        if a is not None))
+                    return NamedSharding(mesh, P(None, all_axes, None, None))
+                return NamedSharding(mesh, P(baxes, saxes, None, None))
+            return NamedSharding(mesh, P(baxes, None, gaxes, None))
+        if x.ndim == 2:   # (B, d) recurrent state
+            return NamedSharding(mesh, P(baxes, None))
+        if x.ndim == 3:   # (B, w, d) conv state or (B, H, hd)
+            return NamedSharding(mesh, P(baxes, None, None))
+        if x.ndim == 4 + 0:
+            pass
+        # (B, H, hd, hd) mLSTM matrix state etc.
+        return NamedSharding(mesh,
+                             P(*([baxes] + [None] * (x.ndim - 1))))
+    return jax.tree.map(one, abstract_caches)

@@ -1,0 +1,122 @@
+"""Batched serving engine with an egress-billed prefix cache.
+
+The serving-side instantiation of the paper: decoded prefixes' KV blocks
+are objects in cloud storage (billed per GET + per byte when re-fetched);
+a local EgressCache with a dollar-aware policy decides which prefix KVs
+stay resident. `audit()` measures the engine's realized dollar-regret
+against the exact offline reference.
+
+The engine itself is a straightforward continuous-batching loop over the
+model's prefill/decode steps — adequate for the examples; the dry-run
+exercises the production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.egress.cache import EgressCache
+from repro.egress.store import ObjectStore
+from repro.models.registry import ModelApi
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 8
+    output: Optional[np.ndarray] = None
+
+
+def _prefix_key(tokens: np.ndarray) -> str:
+    return "prefix/" + hashlib.sha1(tokens.tobytes()).hexdigest()[:16]
+
+
+class ServeEngine:
+    def __init__(self, model: ModelApi, params,
+                 store: Optional[ObjectStore] = None,
+                 prefix_cache_bytes: float = 1 << 24,
+                 policy: str = "gdsf"):
+        self.model = model
+        self.params = params
+        self.store = store or ObjectStore("gcs_internet")
+        self.cache = EgressCache(self.store, prefix_cache_bytes, policy)
+        self._decode = jax.jit(
+            lambda p, t, c, i: model.decode_step(p, t, c, i))
+
+    # ------------------------------------------------------------------
+    def _prefill_batch(self, prompts: np.ndarray):
+        """Run prefill; persist each row's prefix KV to the object store so
+        identical prefixes can be re-fetched (billed) or served from the
+        local egress cache."""
+        logits, caches = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(prompts)})
+        for b in range(prompts.shape[0]):
+            key = _prefix_key(prompts[b])
+            if not self.store.contains(key):
+                # store one row's KV bytes (serialized, billed on re-fetch)
+                row = [np.asarray(kv[0][b]) for kv in caches]
+                blob = b"".join(r.tobytes() for r in row)
+                self.store.put(key, blob)
+        return logits, caches
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Batch requests of equal prompt length and decode greedily."""
+        by_len: dict[int, list[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for _, group in sorted(by_len.items()):
+            prompts = np.stack([r.prompt for r in group])
+            # prefix-cache touch: hit = KV stays local, miss = billed fetch
+            for r in group:
+                key = _prefix_key(r.prompt)
+                if self.store.contains(key):
+                    self.cache.get(key)
+            logits, caches = self._prefill_batch(prompts)
+            S = prompts.shape[1]
+            max_new = max(r.max_new_tokens for r in group)
+            caches = _grow(self.model, caches, S + max_new)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs = [tok]
+            for step in range(max_new - 1):
+                logits, caches = self._decode(self.params, tok, caches,
+                                              jnp.int32(S + step))
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                outs.append(tok)
+            gen = np.stack([np.asarray(t) for t in outs], 1)
+            for i, r in enumerate(group):
+                r.output = gen[i][:r.max_new_tokens]
+        return requests
+
+    def audit(self):
+        return self.cache.audit()
+
+
+def _grow(model: ModelApi, caches, max_len: int):
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe", "vlm"):
+        out = []
+        for (k, v) in caches:
+            pad = max_len - k.shape[1]
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out.append((k, v))
+        return out
+    if cfg.family == "encdec":
+        out = []
+        for (sk, sv, ck, cv) in caches:
+            pad = max_len - sk.shape[1]
+            if pad > 0:
+                sk = jnp.pad(sk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                sv = jnp.pad(sv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out.append((sk, sv, ck, cv))
+        return out
+    return caches

@@ -1,0 +1,102 @@
+"""Atomic, sharded, resumable checkpoints.
+
+Layout:  <dir>/step_<N>.tmp/...   (write)
+         <dir>/step_<N>/          (atomic rename on completion)
+           manifest.json           {step, leaf paths, shapes, dtypes, extra}
+           arr_<k>.npy             one file per pytree leaf
+
+Restore is resharding-tolerant: leaves are loaded host-side and device_put
+against whatever shardings the *new* mesh prescribes, so a job can restart
+on a different ("pod","data") extent (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> pathlib.Path:
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"step_{step:08d}.tmp"
+    final = d / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":   # numpy can't round-trip ml_dtypes natively
+            arr = arr.view(np.uint16)
+        fname = f"arr_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "path": jax.tree_util.keystr(path),
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": dtype,
+        })
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)   # atomic commit
+    return final
+
+
+def latest_step(directory) -> Optional[int]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.is_dir() and p.name.startswith("step_") \
+                and not p.name.endswith(".tmp") \
+                and (p / "manifest.json").exists():
+            steps.append(int(p.name[5:]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory, step: int, like: Any,
+                    shardings: Any = None) -> tuple[Any, dict]:
+    """Restore a pytree saved by save_checkpoint.
+
+    `like` provides the pytree structure; `shardings` (optional, same
+    structure) re-shards each leaf onto the current mesh (elastic restart).
+    """
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_like, treedef = _flatten_with_paths(like)
+    assert len(flat_like) == len(manifest["leaves"]), \
+        f"leaf count mismatch: {len(flat_like)} vs {len(manifest['leaves'])}"
+    leaves = []
+    for (path, leaf), rec in zip(flat_like, manifest["leaves"]):
+        arr = np.load(d / rec["file"])
+        if rec["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        assert tuple(arr.shape) == want, (rec["path"], arr.shape, want)
+        leaves.append(arr)
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(
+            jax.tree.map(lambda s: s, shardings))
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, flat_sh)]
+    else:
+        leaves = [jax.numpy.asarray(a) for a in leaves]
+    tree = treedef.unflatten(leaves)
+    return tree, manifest["extra"]

@@ -1,0 +1,162 @@
+"""Optimizers: AdamW (dtype-configurable moments) and Adafactor.
+
+Optimizer-state memory is the binding constraint for the 1T-param cell
+(kimi-k2 on 256 x 16 GB): f32 Adam moments need 23.4 GB/chip — Adafactor's
+factored second moment fits (DESIGN.md §5). Every state leaf inherits the
+parameter's sharding (factored stats drop the corresponding axis).
+
+API: opt = make_optimizer(cfg); state = opt.init(params);
+     new_params, new_state = opt.update(grads, state, params)
+Gradient math is f32 regardless of storage dtype; the cross-device gradient
+reduction happens in bf16 (compression) before the f32 update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "Optimizer", "make_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"           # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    moment_dtype: Any = jnp.float32   # bf16 halves Adam memory
+    # adafactor
+    factored_min_dim: int = 128
+    clip_threshold: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimizerConfig
+    init: Callable
+    update: Callable
+    state_axes: Callable   # param logical axes -> state logical axes pytree
+
+
+def _adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        b1c = 1 - cfg.b1 ** c.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** c.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            upd = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - cfg.lr * upd
+            return (newp.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                    v32.astype(cfg.moment_dtype))
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"m": newm, "v": newv, "count": c}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes, "count": None}
+
+    return Optimizer(cfg, init, update, state_axes)
+
+
+def _factored(cfg, shape) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim
+            and shape[-2] >= cfg.factored_min_dim)
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Adafactor without momentum (beta1=None), factored second moment."""
+    def init(params):
+        def leaf(p):
+            if _factored(cfg, p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(leaf, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta2 = 1.0 - c.astype(jnp.float32) ** -0.8
+
+        def leaf(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if "vr" in st:
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = vr.mean(-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(denom[..., None], 1e-30))
+                upd = g / jnp.sqrt(jnp.maximum(vhat, 1e-30))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                upd = g / jnp.sqrt(jnp.maximum(v, 1e-30))
+                new_st = {"v": v}
+            # relative RMS clipping (Adafactor eq. 6)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / cfg.clip_threshold)
+            newp = (p.astype(jnp.float32)
+                    - cfg.lr * upd - cfg.lr * cfg.weight_decay
+                    * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_st
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["stats"])
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        newp = tdef.unflatten([o[0] for o in outs])
+        news = tdef.unflatten([o[1] for o in outs])
+        return newp, {"stats": news, "count": c}
+
+    def state_axes(param_axes):
+        def leaf_axes(axes, p):
+            if _factored(cfg, p.shape):
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        # needs params for shapes; resolved in trainer where both exist
+        return leaf_axes
+
+    return Optimizer(cfg, init, update, state_axes)
+
+
+def _sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        newp = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - cfg.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return newp, {"count": state["count"] + 1}
+
+    return Optimizer(cfg, init, update, lambda axes: {"count": None})
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": _adamw, "adafactor": _adafactor, "sgd": _sgd}[cfg.name](cfg)

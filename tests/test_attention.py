@@ -1,0 +1,39 @@
+"""chunked (online-softmax) attention == full attention, all mask modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import attention, chunked_attention
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,G,D,window,causal,q_off,k_off", [
+    (2, 16, 16, 4, 2, 8, 0, True, 0, 0),
+    (1, 32, 32, 4, 1, 16, 8, True, 0, 0),
+    (2, 8, 24, 6, 2, 8, 0, True, 16, 0),      # decode-ish with offset
+    (1, 16, 16, 2, 2, 8, 0, False, 0, 0),     # bidirectional (whisper enc)
+    (1, 4, 12, 4, 4, 8, 6, True, 9, -2),      # shift cache w/ neg k_offset
+    (2, 40, 40, 8, 4, 16, 0, True, 0, 0),
+])
+def test_chunked_matches_full(B, Sq, Sk, H, G, D, window, causal, q_off, k_off):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sk, G, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sk, G, D)), jnp.float32)
+    kw = dict(causal=causal, window=window, q_offset=q_off, k_offset=k_off)
+    full = attention(q, k, v, **kw)
+    for chunk in (4, 8, 16):
+        ck = chunked_attention(q, k, v, kv_chunk=chunk, **kw)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(ck),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_agrees():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 2, 4)), jnp.float32)
+    a = attention(q, k, v, logit_softcap=30.0)
+    b = chunked_attention(q, k, v, logit_softcap=30.0, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)

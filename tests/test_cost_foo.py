@@ -1,0 +1,49 @@
+"""cost-FOO bracket for variable-size caching (paper §2, §4)."""
+import numpy as np
+import pytest
+
+from repro.core import (PRICE_VECTORS, Trace, cost_foo, exact_opt_uniform,
+                        lp_opt, miss_costs, zipf_trace)
+
+
+def test_lower_bound_below_feasible_upper():
+    tr = zipf_trace(n_objects=80, n_requests=1200, mean_size=32 * 1024, seed=2)
+    costs = miss_costs(tr.sizes, PRICE_VECTORS["gcs_internet"])
+    B = float(np.sort(tr.sizes)[-20:].sum())  # room for ~20 large objects
+    r = cost_foo(tr, costs, B)
+    assert r.lower <= r.upper + 1e-9
+    assert r.lower > 0
+    assert r.bracket >= 0
+
+
+def test_bracket_is_tight_on_synthetic():
+    """Paper: median bracket ~0.04 on variable-size synthetic traces."""
+    brackets = []
+    for seed in range(6):
+        tr = zipf_trace(n_objects=100, n_requests=1500, sigma=1.5,
+                        mean_size=64 * 1024, seed=seed)
+        costs = miss_costs(tr.sizes, PRICE_VECTORS["s3_internet"])
+        B = float(np.quantile(tr.sizes, 0.8) * 25)
+        brackets.append(cost_foo(tr, costs, B).bracket)
+    med = float(np.median(brackets))
+    assert med < 0.15, f"median bracket {med} too loose: {brackets}"
+
+
+def test_lp_reduces_to_exact_for_uniform():
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, 30, 500).astype(np.int32)
+    costs = rng.lognormal(0, 2, 30)
+    tr = Trace(ids=ids, sizes=np.ones(30))
+    r = cost_foo(tr, costs, 8.0, policies=("gdsf", "belady", "cost_belady"))
+    exact = exact_opt_uniform(ids, costs, 8).dollars
+    assert r.lower == pytest.approx(exact, rel=1e-6)
+
+
+def test_fractional_lower_bound_below_uniform_opt():
+    """LP with sizes==1 must equal the flow optimum (integrality)."""
+    rng = np.random.default_rng(4)
+    ids = rng.integers(0, 25, 400).astype(np.int32)
+    costs = rng.lognormal(0, 1.5, 25)
+    lo, _, x, _ = lp_opt(ids, costs, np.ones(25), 6.0)
+    exact = exact_opt_uniform(ids, costs, 6).dollars
+    assert lo == pytest.approx(exact, rel=1e-6)

@@ -1,0 +1,51 @@
+"""Fast versions of the paper's headline experiments (full versions live in
+benchmarks/; these guard the *claims* in CI time)."""
+import numpy as np
+import pytest
+
+from benchmarks.bench_contention import run_frontier
+from benchmarks.bench_heterogeneity import run_sweep
+from repro.core import (PRICE_VECTORS, heterogeneity, miss_costs,
+                        twemcache_like)
+
+
+def _spearman(x, y):
+    rx = np.argsort(np.argsort(x)).astype(float)
+    ry = np.argsort(np.argsort(y)).astype(float)
+    rx -= rx.mean(); ry -= ry.mean()
+    d = np.sqrt((rx**2).sum() * (ry**2).sum())
+    return float((rx * ry).sum() / d)
+
+
+def test_heterogeneity_law():
+    rows = run_sweep(n_points=10, T=1500, N=80, B=16)
+    H = np.array([r[0] for r in rows])
+    lru = np.array([r[1] for r in rows])
+    gdsf = np.array([r[2] for r in rows])
+    assert _spearman(H, lru) > 0.6          # paper: 0.87
+    hi = H >= 0.5
+    if hi.sum() >= 3:
+        assert np.median(gdsf[hi]) < 0.6 * np.median(lru[hi])
+
+
+def test_contention_frontier():
+    rows, n_exp = run_frontier(n_exp=8, n_cheap=32, T=2500)
+    d = dict(rows)
+    # large regret below the frontier, collapse just past it (eq-2
+    # mandatory-insertion semantics: frontier at N_exp + 1)
+    assert d[n_exp - 2] > 0.1
+    assert d[n_exp + 1] < 5e-3
+    assert d[n_exp + 4] < 5e-3
+
+
+def test_crossover_direction():
+    """The price vector alone moves the workload across s*: H rises
+    monotonically as s* falls (paper Table 1)."""
+    tr = twemcache_like(n_requests=6000, seed=3)
+    order = ["s3_cross_region", "s3_internet", "azure_internet",
+             "gcs_internet"]
+    hs = [heterogeneity(tr.ids, miss_costs(tr.sizes, PRICE_VECTORS[n]))
+          for n in order]
+    sstars = [PRICE_VECTORS[n].crossover_bytes for n in order]
+    assert all(a >= b for a, b in zip(sstars, sstars[1:]))   # s* falls
+    assert all(a <= b + 1e-9 for a, b in zip(hs, hs[1:]))    # H rises

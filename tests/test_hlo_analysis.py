@@ -1,0 +1,60 @@
+"""HLO collective-bytes parser: shapes, tuples, while-trip multiplication."""
+from repro.launch.hlo_analysis import (_shape_bytes, _split_computations,
+                                       analyze_collectives)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,512,1024]") == 2 * 512 * 1024 * 4
+    assert _shape_bytes("bf16[16]{0}") == 32
+    assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond (p2: (s32[], f32[128])) -> pred[] {
+  %p2 = (s32[], f32[128]) parameter(0)
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[256]) -> f32[256] {
+  %a = f32[256]{0} parameter(0)
+  %ag = f32[256]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[256]{0} add(%ag, %ag)
+}
+"""
+
+
+def test_while_trip_multiplication():
+    cs = analyze_collectives(_HLO)
+    # all-gather once at entry: 256*4 bytes
+    assert cs.bytes_by_kind["all-gather"] == 256 * 4
+    # all-reduce inside the while body: 128*4 bytes * 7 trips
+    assert cs.bytes_by_kind["all-reduce"] == 128 * 4 * 7
+    assert cs.count_by_kind["all-reduce"] == 7
+
+
+def test_split_handles_tuple_params():
+    comps = _split_computations(_HLO)
+    assert "body" in comps and "cond" in comps and "main" in comps
+
+
+def test_instruction_name_with_opcode_substring():
+    hlo = """
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %all-gather.61 = f32[4]{0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[4]{0} add(%all-gather.61, %all-gather.61)
+}
+"""
+    cs = analyze_collectives(hlo)
+    assert cs.count_by_kind["all-gather"] == 1
+    assert cs.bytes_by_kind["all-gather"] == 16

@@ -1,0 +1,49 @@
+"""JAX lax.scan policy simulator == Python reference, step for step."""
+import numpy as np
+import pytest
+
+from repro.core import Trace, simulate
+from repro.core.policies_jax import POLICY_WEIGHTS, simulate_jax, sweep_jax
+
+
+def _rand(rng, T, N):
+    ids = rng.integers(0, N, T).astype(np.int32)
+    # power-of-two costs: every score the policies form is exact in f32,
+    # so the JAX sim must match the f64 Python reference bit-for-bit
+    costs = 2.0 ** rng.integers(0, 12, N)
+    return ids, costs
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "gds", "gdsf",
+                                    "belady", "cost_belady"])
+def test_jax_matches_python_uniform(policy):
+    rng = np.random.default_rng(hash(policy) % 2**32)
+    for trial in range(8):
+        T = int(rng.integers(50, 300))
+        N = int(rng.integers(5, 40))
+        B = int(rng.integers(1, max(2, N // 2)))
+        ids, costs = _rand(rng, T, N)
+        tr = Trace(ids=ids, sizes=np.ones(N))
+        ref = simulate(policy, tr, costs, float(B))
+        d, h = simulate_jax(policy, ids, costs, B, num_objects=N)
+        assert h == ref.hits, f"{policy} trial={trial} hits {h} != {ref.hits}"
+        assert d == pytest.approx(ref.dollars, rel=1e-5), f"{policy} t={trial}"
+
+
+def test_sweep_shape_and_consistency():
+    rng = np.random.default_rng(0)
+    ids, costs = _rand(rng, 200, 20)
+    cost_matrix = np.stack([costs, 10 * costs, costs ** 2])
+    budgets = np.array([2, 4, 8])
+    out = sweep_jax("gdsf", ids, cost_matrix, budgets, num_objects=20)
+    assert out.shape == (3, 3)
+    # more budget never costs more dollars (same price vector)
+    assert (np.diff(out, axis=1) <= 1e-4).all()
+    # single-cell agreement
+    d, _ = simulate_jax("gdsf", ids, cost_matrix[1], 4, num_objects=20)
+    assert out[1, 1] == pytest.approx(d, rel=1e-6)
+
+
+def test_all_policies_registered():
+    assert set(POLICY_WEIGHTS) == {"lru", "lfu", "gds", "gdsf",
+                                   "belady", "cost_belady"}

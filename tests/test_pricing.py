@@ -1,0 +1,51 @@
+"""Price vectors, miss costs (eq. 1), crossover s* (eq. 3), heterogeneity H."""
+import numpy as np
+import pytest
+
+from repro.core import PRICE_VECTORS, crossover_bytes, heterogeneity, miss_costs
+
+
+def test_crossover_matches_paper():
+    """Paper §3: s* ~ 4.4 KB S3-internet, ~20 KB S3 cross-region,
+    ~460 B Azure, ~330 B GCS."""
+    assert crossover_bytes(PRICE_VECTORS["s3_internet"]) == pytest.approx(4444, rel=0.05)
+    assert crossover_bytes(PRICE_VECTORS["s3_cross_region"]) == pytest.approx(20000, rel=0.05)
+    assert crossover_bytes(PRICE_VECTORS["azure_internet"]) == pytest.approx(460, rel=0.05)
+    assert crossover_bytes(PRICE_VECTORS["gcs_internet"]) == pytest.approx(333, rel=0.05)
+
+
+def test_miss_cost_linear_in_size():
+    pv = PRICE_VECTORS["s3_internet"]
+    sizes = np.array([0.0, 1e3, 1e6, 1e9])
+    c = miss_costs(sizes, pv)
+    assert c[0] == pytest.approx(pv.get_fee)
+    assert c[3] == pytest.approx(pv.get_fee + 0.09, rel=1e-9)
+    # below s*: GET-fee dominated; above: egress dominated
+    sstar = pv.crossover_bytes
+    assert pv.miss_cost(sstar / 100) < 1.02 * pv.get_fee
+    assert pv.miss_cost(sstar * 100) > 50 * pv.get_fee
+
+
+def test_paper_intro_example():
+    """1 KB x100 accesses vs 1 GB x10: dollar gap > 4 orders of magnitude."""
+    pv = PRICE_VECTORS["s3_internet"]
+    small_saving = 100 * pv.miss_cost(1e3)   # ~ $5e-5
+    big_saving = 10 * pv.miss_cost(1e9)      # ~ $0.9
+    assert small_saving == pytest.approx(5e-5, rel=0.5)
+    assert big_saving == pytest.approx(0.9, rel=0.1)
+    assert big_saving / small_saving > 1e4
+
+
+def test_heterogeneity_zero_for_homogeneous():
+    ids = np.array([0, 1, 2, 0, 1])
+    costs = np.full(3, 2.5)
+    assert heterogeneity(ids, costs) == pytest.approx(0.0)
+
+
+def test_heterogeneity_rises_with_dispersion():
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 50, 1000)
+    base = np.ones(50)
+    h_low = heterogeneity(ids, base * (1 + 0.01 * rng.standard_normal(50)))
+    h_high = heterogeneity(ids, np.exp(2 * rng.standard_normal(50)))
+    assert h_low < 0.05 < h_high

@@ -1,0 +1,72 @@
+"""Sharding rules: divisibility-aware logical->mesh mapping (unit level,
+no devices needed beyond CPU)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    """Duck-typed stand-in so rule logic is testable without 512 devices."""
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+        self.size = int(np.prod(list(shape_dict.values())))
+
+
+def _rules(multi=True, moe_ep=False):
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16} if multi
+                    else {"data": 16, "model": 16})
+    return sh.ShardingRules(
+        mesh,
+        {"embed": tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+         "vocab": "model", "heads": "model", "kv_heads": "model",
+         "mlp": "model",
+         "expert": "model" if moe_ep else None},
+        dp_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+
+
+def test_fsdp_tp_spec():
+    r = _rules()
+    spec = r.spec_for((7168, 2048), ("embed", "mlp"))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_divisibility_fallback_drops_leading_axis():
+    r = _rules()
+    # 16 rows on a 32-way ("pod","data") axis -> keep the 16-way "data"
+    spec = r.spec_for((16, 128), ("embed", None))
+    assert spec == P("data", None)
+
+
+def test_indivisible_drops_to_none():
+    r = _rules()
+    # a bare 20-head axis on a 16-way model axis: replicate
+    spec = r.spec_for((1280, 20), ("embed", "kv_heads"))
+    assert spec[1] is None
+    # but the packed G*hd projection dim (20*64=1280) is divisible and shards
+    spec2 = r.spec_for((1280, 20 * 64), ("embed", "kv_heads"))
+    assert spec2[1] == "model"
+
+
+def test_axis_used_once():
+    r = _rules(multi=False)
+    # two dims both wanting "model": second gets None
+    spec = r.spec_for((2048, 2048), ("heads", "mlp"))
+    assert spec == P("model", None)
+
+
+def test_moe_ep_rules():
+    r = _rules(moe_ep=True)
+    spec = r.spec_for((384, 7168, 2048), ("expert", "embed", "mlp"))
+    assert spec[0] == "model"       # experts over TP axis
+    assert spec[2] is None          # mlp can't reuse "model"
+
+
+def test_odd_dims_never_crash():
+    r = _rules()
+    for dims in [(1,), (3, 5), (17, 33, 7)]:
+        spec = r.spec_for(dims, tuple(["embed", "heads", "mlp"][:len(dims)]))
+        assert len(spec) == len(dims)
