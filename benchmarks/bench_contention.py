@@ -4,12 +4,17 @@ With N_exp expensive objects, GDSF's regret is large while B < N_exp and
 collapses to ~0 exactly at B = N_exp: once the expensive working set fits,
 greedy cost-ranking is optimal (paper: 0.23-0.69 before, 0.0002 at the
 frontier). Exact OPT reference, uniform pages.
+
+The whole budget axis is computed parametrically: ONE warm-started SSP run
+(`exact_opt_uniform_sweep`) replaces the per-budget exact solves, and the
+GDSF side replays every budget in one compiled device program (`sweep_jax`).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Trace, exact_opt_uniform, regret, simulate
+from repro.core import exact_opt_uniform_sweep, regret
+from repro.core.policies_jax import sweep_jax
 from .common import emit, timed
 
 
@@ -21,12 +26,12 @@ def run_frontier(n_exp=16, n_cheap=64, T=6000, seed=0, ratio=1e6):
                         np.full(n_cheap, 0.5 / n_cheap)])
     ids = rng.choice(N, size=T, p=p).astype(np.int32)
     costs = np.concatenate([np.full(n_exp, ratio), np.full(n_cheap, 1.0)])
-    tr = Trace(ids=ids, sizes=np.ones(N))
-    out = []
-    for B in range(2, n_exp + 8):
-        opt = exact_opt_uniform(ids, costs, B).dollars
-        r = regret(simulate("gdsf", tr, costs, float(B)).dollars, opt)
-        out.append((B, r))
+    budgets = np.arange(2, n_exp + 8)
+    opt = exact_opt_uniform_sweep(ids, costs, budgets)          # one solve
+    gdsf = sweep_jax("gdsf", ids, costs[None, :], budgets,      # one program
+                     num_objects=N)[0]
+    out = [(int(B), regret(float(d), float(o)))
+           for B, d, o in zip(budgets, gdsf, opt.dollars)]
     return out, n_exp
 
 

@@ -4,13 +4,20 @@ The Twitter twemcache stand-in (mean 243 B objects) replayed under
 S3-cross-region / S3-internet / Azure / GCS pricing: as s* falls, more
 objects become egress-dominated, H rises, and GDSF/LRU falls (paper:
 0.82 -> 0.65). The regime is set by the price vector alone.
+
+The budget axis of the regime map is computed parametrically: per price
+vector ONE warm-started `exact_opt_uniform_sweep` run replaces the
+per-budget exact solves, and all (policy x price x budget) heuristic cells
+run as ONE compiled `sweep_jax` device program.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (PRICE_VECTORS, cost_foo, heterogeneity, miss_costs,
-                        regret, simulate, twemcache_like)
+from repro.core import (PRICE_VECTORS, cost_foo, exact_opt_uniform_sweep,
+                        heterogeneity, miss_costs, regret, simulate,
+                        twemcache_like)
+from repro.core.policies_jax import sweep_jax
 from .common import emit, timed
 
 ORDER = ["s3_cross_region", "s3_internet", "azure_internet", "gcs_internet"]
@@ -36,6 +43,27 @@ def run_table(n_requests=20000, budget_frac=0.3, seed=0):
     return rows
 
 
+def run_budget_regime(n_requests=20000, seed=0,
+                      budgets=(32, 64, 128, 256)):
+    """Regret-vs-budget regime map, page-uniform exact reference.
+
+    Exact OPT across all budgets costs one parametric solve per price
+    vector; the (2 policies x 4 prices x K budgets) heuristic grid is one
+    compiled program.
+    """
+    tr = twemcache_like(n_requests=n_requests, seed=seed)
+    budgets = np.asarray(budgets, dtype=np.int64)
+    cost_matrix = np.stack([miss_costs(tr.sizes, PRICE_VECTORS[name])
+                            for name in ORDER])
+    opt = np.stack([exact_opt_uniform_sweep(tr.ids, cost_matrix[i],
+                                            budgets).dollars
+                    for i in range(len(ORDER))])          # (P, K)
+    grid = sweep_jax(["lru", "gdsf"], tr.ids, cost_matrix, budgets,
+                     num_objects=tr.num_objects, sizes=tr.sizes)  # (2, P, K)
+    reg = (grid - opt[None]) / np.maximum(opt[None], 1e-12)
+    return budgets, reg
+
+
 def main():
     rows, dt = timed(run_table, repeats=1)
     parts = []
@@ -47,6 +75,15 @@ def main():
     Hs = [r["H"] for r in rows]
     emit("table1_H_monotone", 0.0,
          f"monotone={all(a <= b + 1e-9 for a, b in zip(Hs, Hs[1:]))}")
+
+    # budget-axis regime map: exact sweep + one (2 x 4 x K) device grid
+    (budgets, reg), dt_map = timed(run_budget_regime, repeats=1)
+    parts = []
+    for i, name in enumerate(ORDER):
+        gdsf_reg = ";".join(f"B{b}={reg[1, i, k]:.3f}"
+                            for k, b in enumerate(budgets))
+        parts.append(f"{name}:{gdsf_reg}")
+    emit("fig3_budget_regime_map", dt_map, "|".join(parts))
     return rows
 
 

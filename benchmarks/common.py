@@ -1,7 +1,19 @@
-"""Shared benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Shared benchmark utilities: timing + CSV emission (name,us_per_call,derived).
+
+Every `emit` row is also collected in-process so `run.py` can write a
+machine-readable `BENCH_<name>.json` next to the CSV stream — the artifact
+the perf trajectory is tracked with across PRs.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
+
+# rows collected since the last `reset_records()`: (name, seconds, derived)
+_RECORDS: list[dict] = []
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"
 
 
 def timed(fn, *args, repeats: int = 3, **kwargs):
@@ -16,7 +28,22 @@ def timed(fn, *args, repeats: int = 3, **kwargs):
 
 
 def emit(name: str, seconds: float, derived: str):
+    _RECORDS.append(dict(name=name, us_per_call=seconds * 1e6, derived=derived))
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def write_json(bench: str) -> pathlib.Path:
+    """Dump the rows emitted since the last reset to BENCH_<bench>.json."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"BENCH_{bench}.json"
+    payload = dict(bench=bench, generated=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   rows=list(_RECORDS))
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def spearman(x, y) -> float:

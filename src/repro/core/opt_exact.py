@@ -13,8 +13,13 @@ gap with cost -c_i.
 
 This module provides three mutually-validating solvers:
 
-  * `exact_opt_uniform`    — successive-shortest-path min-cost flow
-                             (paper's scalable exact form; pure numpy/heapq)
+  * `exact_opt_uniform`    — successive-shortest-path min-cost flow on flat
+                             CSR numpy arrays, shortest paths by scipy's C
+                             Dijkstra (paper's scalable exact form)
+  * `exact_opt_uniform_sweep`
+                           — the parametric form: ONE warm-started SSP run
+                             answers every budget in a grid at roughly the
+                             cost of the largest single solve (DESIGN.md §5)
   * `lp_opt`               — the interval LP in an O(T)-nonzero difference
                              form, solved by scipy/HiGHS (covers variable
                              sizes too, where it is the cost-FOO *fractional*
@@ -27,7 +32,6 @@ Total billed cost of a schedule = sum_t c_{o(t)}  -  savings(selected hits).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
 import numpy as np
 
@@ -37,7 +41,9 @@ __all__ = [
     "Interval",
     "build_intervals",
     "OptResult",
+    "SweepResult",
     "exact_opt_uniform",
+    "exact_opt_uniform_sweep",
     "lp_opt",
     "dp_opt_uniform",
     "enumerate_opt_uniform",
@@ -80,98 +86,184 @@ class OptResult:
 
 # ---------------------------------------------------------------------------
 # min-cost flow (successive shortest paths with Johnson potentials)
+#
+# Flat-array engine: arcs live in paired numpy arrays (edge i and i^1 are
+# duals), adjacency is CSR-style (edges lexsorted by (src, dst), grouped),
+# and each shortest-path phase runs through scipy's C Dijkstra on reduced
+# costs. Saturated arcs are not removed from the CSR structure — their
+# weight is set to _BLOCKED, far above any real path cost, so the sparsity
+# pattern (and the per-(src,dst) dedup below) is computed exactly once.
 # ---------------------------------------------------------------------------
 
-class _MCMF:
-    """Min-cost max-flow on a DAG-ordered node line, float costs.
+_BLOCKED = 1e18          # weight of a saturated arc in the Dijkstra graph
+_BLOCK_THRESH = 1e17     # any dist above this means "no residual path"
 
-    Arc storage in paired-edge style: edge i and i^1 are duals.
+
+@dataclasses.dataclass
+class SweepResult:
+    """Exact OPT for every budget in a grid, from ONE parametric SSP run."""
+    budgets: np.ndarray        # (K,) int   — page budgets B
+    dollars: np.ndarray        # (K,) float — exact billed cost at each B
+    savings: np.ndarray        # (K,) float — dollars saved vs caching nothing
+    hits: np.ndarray           # (K,) int   — retained gaps (incl. free ones)
+    total_no_cache: float      # sum of all c_{o(t)}
+    free_hits: int             # gaps with no interior instant (always kept)
+    unit_path_costs: np.ndarray  # per-unit SSP path costs (non-decreasing)
+
+
+class _ParametricSSP:
+    """Successive shortest paths on the caching time line, budget-parametric.
+
+    Nodes are serving instants 1..T-1 (index p-1) plus the sink instant T
+    (index T-1); shelf arcs (p-1 -> p, capacity k_max, cost 0) and one unit
+    arc per paid reuse gap (node t -> node u-1, cost -save).
+
+    Why one run answers every budget: with flow value bounded by k, the flow
+    through any shelf arc is at most k (every cut carries exactly the total
+    flow, and interval arcs take their share first), so the shelf capacity
+    never binds and the ONLY budget-dependent quantity is the flow bound
+    itself. SSP augments along non-decreasing path costs, hence the optimal
+    flow of value k is, for every k, a prefix of the same augmentation
+    sequence — raising the budget just unlocks the next units. Recording the
+    per-unit path costs therefore yields exact OPT for all budgets at once.
     """
 
-    def __init__(self, n: int):
-        self.n = n
-        self.head: list[list[int]] = [[] for _ in range(n)]
-        self.to: list[int] = []
-        self.cap: list[float] = []
-        self.cost: list[float] = []
+    def __init__(self, T: int, paid_t: np.ndarray, paid_u: np.ndarray,
+                 paid_save: np.ndarray, k_max: int):
+        self.n = n = T
+        self.s, self.t = 0, T - 1
+        self.m = m = len(paid_t)
+        self.eps = 1e-12 * max(1.0, float(paid_save.max()) if m else 1.0)
+        ns = T - 1  # shelf arcs
+        ne = 2 * (ns + m)
+        shelf_src = np.arange(ns, dtype=np.int64)
+        fwd_src = np.concatenate([shelf_src, paid_t.astype(np.int64)])
+        fwd_dst = np.concatenate([shelf_src + 1, paid_u.astype(np.int64) - 1])
+        fwd_cap = np.concatenate([np.full(ns, float(k_max)), np.ones(m)])
+        fwd_cost = np.concatenate([np.zeros(ns), -paid_save.astype(np.float64)])
+        self.frm = np.empty(ne, np.int64)
+        self.to = np.empty(ne, np.int64)
+        self.cap = np.empty(ne, np.float64)
+        self.cost = np.empty(ne, np.float64)
+        self.frm[0::2] = fwd_src; self.to[0::2] = fwd_dst
+        self.cap[0::2] = fwd_cap; self.cost[0::2] = fwd_cost
+        self.frm[1::2] = fwd_dst; self.to[1::2] = fwd_src
+        self.cap[1::2] = 0.0;     self.cost[1::2] = -fwd_cost
+        self.first_interval_edge = 2 * ns  # interval fwd arcs: even ids >= this
 
-    def add(self, a: int, b: int, cap: float, cost: float) -> int:
-        i = len(self.to)
-        self.to.append(b); self.cap.append(cap); self.cost.append(cost)
-        self.to.append(a); self.cap.append(0.0); self.cost.append(-cost)
-        self.head[a].append(i)
-        self.head[b].append(i + 1)
-        return i
+        # CSR with per-(src,dst) dedup. Parallel arcs happen only when a gap
+        # has exactly one interior instant (interval arc t -> t+1 alongside
+        # the shelf arc), so every group has at most two members.
+        order = np.lexsort((self.to, self.frm))
+        key = self.frm[order] * np.int64(n) + self.to[order]
+        first = np.ones(len(key), bool)
+        first[1:] = key[1:] != key[:-1]
+        starts = np.flatnonzero(first)
+        sizes = np.diff(np.append(starts, len(key)))
+        assert sizes.max(initial=1) <= 2, "unexpected arc multiplicity"
+        self.grp_keys = key[starts]
+        self.grp_e0 = order[starts]
+        self.grp_e1 = np.where(sizes == 2, order[np.minimum(starts + 1,
+                                                            len(key) - 1)], -1)
+        src_of_grp = self.frm[self.grp_e0]
+        counts = np.bincount(src_of_grp, minlength=n)
+        self.indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+        self.indices = self.to[self.grp_e0].astype(np.int32)
 
-    def solve(self, s: int, t: int, maxflow: float, eps: float = 1e-12):
-        """Send up to `maxflow` units s->t; stop once the shortest augmenting
-        path has non-negative cost (further units would be zero-cost shelf
-        traffic only). Returns (flow_sent_on_negative_paths, total_cost)."""
-        n = self.n
-        INF = float("inf")
-        # initial potentials: single forward pass (graph arcs all go a < b)
-        pot = [INF] * n
-        pot[s] = 0.0
-        for a in range(n):
-            if pot[a] == INF:
-                continue
-            for i in self.head[a]:
-                if self.cap[i] > eps:
-                    b = self.to[i]
-                    d = pot[a] + self.cost[i]
-                    if d < pot[b] - 1e-15:
-                        pot[b] = d
-        sent, total = 0.0, 0.0
-        while maxflow > eps:
-            dist = [INF] * n
-            par: list[int] = [-1] * n
-            dist[s] = 0.0
-            pq = [(0.0, s)]
-            while pq:
-                d, a = heapq.heappop(pq)
-                if d > dist[a] + 1e-15:
-                    continue
-                if a == t:
-                    break
-                for i in self.head[a]:
-                    if self.cap[i] <= eps:
-                        continue
-                    b = self.to[i]
-                    nd = d + self.cost[i] + pot[a] - pot[b]
-                    if nd < dist[b] - 1e-15:
-                        dist[b] = nd
-                        par[b] = i
-                        heapq.heappush(pq, (nd, b))
-            if dist[t] == INF:
+        # exact initial potentials: one relaxation pass in topological order
+        # (the original graph is a DAG on the time line)
+        pot = np.zeros(n)
+        by_dst = np.argsort(paid_u, kind="stable") if m else np.zeros(0, int)
+        ptr = 0
+        for p in range(1, n):
+            lo = pot[p - 1]
+            while ptr < m and int(paid_u[by_dst[ptr]]) - 1 == p:
+                j = by_dst[ptr]
+                cand = pot[int(paid_t[j])] - float(paid_save[j])
+                if cand < lo:
+                    lo = cand
+                ptr += 1
+            pot[p] = lo
+        self.pot = pot
+
+    def run(self, max_units: int) -> tuple[np.ndarray, np.ndarray]:
+        """Augment unit-by-unit until `max_units` is reached or the shortest
+        residual path stops saving dollars. Returns (unit_path_costs,
+        unit_net_selected): per flow unit, its true path cost and the net
+        number of interval arcs it newly saturates (reverse traversals of
+        earlier selections count -1 — one unit can carry several short gaps
+        or re-route earlier ones)."""
+        from scipy.sparse import csr_matrix
+        from scipy.sparse.csgraph import dijkstra
+
+        n, s, t = self.n, self.s, self.t
+        unit_costs: list[float] = []
+        unit_dsel: list[int] = []
+        remaining = max_units
+        while remaining > 0:
+            rc = self.cost + self.pot[self.frm] - self.pot[self.to]
+            w = np.where(self.cap > 0.5, rc, _BLOCKED)
+            data = w[self.grp_e0]
+            two = self.grp_e1 >= 0
+            np.minimum(data, np.where(two, w[self.grp_e1], _BLOCKED),
+                       out=data)
+            np.maximum(data, 0.0, out=data)  # clip fp jitter in reduced costs
+            g = csr_matrix((data, self.indices, self.indptr), shape=(n, n))
+            dist, pred = dijkstra(g, directed=True, indices=s,
+                                  return_predecessors=True)
+            dt = float(dist[t])
+            if dt >= _BLOCK_THRESH:
                 break
-            path_cost = dist[t] + pot[t] - pot[s]
-            if path_cost >= -eps:
+            path_cost = dt + self.pot[t] - self.pot[s]
+            if path_cost >= -self.eps:
                 break  # no more negative (dollar-saving) paths
-            dt = dist[t]
-            for a in range(n):
-                if dist[a] < INF:
-                    # early sink-break leaves tentative labels; clamping by
-                    # dist[sink] keeps reduced costs non-negative (Johnson)
-                    pot[a] += min(dist[a], dt)
-                else:
-                    pot[a] += dt
-            # bottleneck
-            f = maxflow
+            self.pot += np.minimum(dist, dt)  # Johnson update, clamped at sink
+            # node path sink -> source, then per-hop arc selection
+            nodes = [t]
             b = t
             while b != s:
-                i = par[b]
-                f = min(f, self.cap[i])
-                b = self.to[i ^ 1]
-            b = t
-            while b != s:
-                i = par[b]
-                self.cap[i] -= f
-                self.cap[i ^ 1] += f
-                b = self.to[i ^ 1]
-            sent += f
-            total += f * path_cost
-            maxflow -= f
-        return sent, total
+                b = int(pred[b])
+                nodes.append(b)
+            hops = np.array(nodes[::-1], dtype=np.int64)
+            a_arr, b_arr = hops[:-1], hops[1:]
+            gidx = np.searchsorted(self.grp_keys, a_arr * np.int64(n) + b_arr)
+            e0 = self.grp_e0[gidx]
+            e1 = self.grp_e1[gidx]
+            use1 = (e1 >= 0) & (w[np.maximum(e1, 0)] < w[e0])
+            edges = np.where(use1, e1, e0)
+            f = min(float(remaining), float(self.cap[edges].min()))
+            # a dollar-saving path always crosses a unit interval arc
+            assert f == 1.0, f"non-unit bottleneck {f} on a negative path"
+            self.cap[edges] -= f
+            self.cap[edges ^ 1] += f
+            is_iv = edges >= self.first_interval_edge
+            dsel = int(np.sum(is_iv & (edges % 2 == 0))
+                       - np.sum(is_iv & (edges % 2 == 1)))
+            unit_costs.append(path_cost)
+            unit_dsel.append(dsel)
+            remaining -= 1
+        return np.asarray(unit_costs), np.asarray(unit_dsel, dtype=np.int64)
+
+    def saturated_intervals(self) -> np.ndarray:
+        """Indices j of paid intervals whose unit arc is saturated."""
+        iv_caps = self.cap[self.first_interval_edge::2]
+        return np.flatnonzero(iv_caps < 0.5)
+
+
+def _paid_free_arrays(ids: np.ndarray, costs: np.ndarray):
+    """Vectorized interval extraction: (paid_t, paid_u, paid_save, free_save,
+    n_free, total)."""
+    ids = np.asarray(ids)
+    T = len(ids)
+    save = np.asarray(costs, dtype=np.float64)[ids] if T else np.zeros(0)
+    total = float(save.sum())
+    nxt = next_use_indices(ids)
+    t_arr = np.arange(T, dtype=np.int64)
+    recurs = nxt < T
+    free = recurs & (nxt == t_arr + 1)
+    paid = recurs & (nxt > t_arr + 1)
+    return (t_arr[paid], nxt[paid], save[paid],
+            float(save[free].sum()), int(free.sum()), total)
 
 
 def exact_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int,
@@ -184,37 +276,64 @@ def exact_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int,
     """
     ids = np.asarray(ids)
     T = len(ids)
-    total = float(costs[ids].sum())
     if B < 1 or T == 0:
+        total = float(np.asarray(costs)[ids].sum()) if T else 0.0
         return OptResult(total, 0.0, total, 0, [], 0)
-    intervals = build_intervals(ids, costs, np.ones(max(1, ids.max() + 1)))
-    free = [iv for iv in intervals if iv.u == iv.t + 1]
-    paid = [iv for iv in intervals if iv.u > iv.t + 1]
-    free_save = sum(iv.save for iv in free)
+    paid_t, paid_u, paid_save, free_save, n_free, total = \
+        _paid_free_arrays(ids, costs)
     k = B - 1
-    if k == 0 or not paid:
+    if k == 0 or len(paid_t) == 0:
         dollars = total - free_save
-        return OptResult(dollars, free_save, total, len(free), [], len(free))
-    # node numbering: instant p (1..T-1) -> index p-1 ; sink instant T -> T-1
-    n = T
-    g = _MCMF(n)
-    for p in range(1, T):  # shelf arc across every position cut p=1..T-1
-        g.add(p - 1, p, float(k), 0.0)
-    arc_of = {}
-    for j, iv in enumerate(paid):
-        # interval occupies instants t+1..u-1 -> arc node(t+1) -> node(u)
-        arc_of[j] = g.add(iv.t, iv.u - 1, 1.0, -iv.save)
-    _, cost = g.solve(0, T - 1, float(k))
-    savings = -cost + free_save
+        return OptResult(dollars, free_save, total, n_free, [], n_free)
+    ssp = _ParametricSSP(T, paid_t, paid_u, paid_save, k)
+    unit_costs, _ = ssp.run(k)
+    savings = float(-unit_costs.sum()) + free_save
+    sel_idx = ssp.saturated_intervals()
     selected = []
     if return_selected:
-        for j, iv in enumerate(paid):
-            if g.cap[arc_of[j]] < 0.5:  # unit arc saturated
-                selected.append(iv)
+        selected = [Interval(int(paid_t[j]), int(paid_u[j]), int(ids[paid_t[j]]),
+                             float(paid_save[j]), 1.0) for j in sel_idx]
     dollars = total - savings
-    return OptResult(dollars, savings, total,
-                     len(free) + sum(1 for j in arc_of if g.cap[arc_of[j]] < 0.5),
-                     selected, len(free))
+    return OptResult(dollars, savings, total, n_free + len(sel_idx),
+                     selected, n_free)
+
+
+def exact_opt_uniform_sweep(ids: np.ndarray, costs: np.ndarray,
+                            budgets: np.ndarray) -> SweepResult:
+    """Exact dollar-optimum for EVERY budget in `budgets`, one SSP run.
+
+    Warm start along the budget axis: the residual graph after k units of
+    flow is exactly the state a (k+1)-budget solve would resume from, so the
+    sweep costs roughly one solve at max(budgets) instead of len(budgets)
+    independent solves (see `_ParametricSSP` for why capacities never bind).
+
+    Matches per-budget `exact_opt_uniform` to float precision; asserted at
+    1e-6 relative in tests and bench_flow_scale.
+    """
+    budgets = np.asarray(budgets, dtype=np.int64)
+    if budgets.ndim != 1 or len(budgets) == 0:
+        raise ValueError("budgets must be a non-empty 1-D array")
+    ids = np.asarray(ids)
+    T = len(ids)
+    K = len(budgets)
+    paid_t, paid_u, paid_save, free_save, n_free, total = \
+        _paid_free_arrays(ids, costs)
+    k_max = int(budgets.max()) - 1
+    if T == 0 or k_max < 1 or len(paid_t) == 0:
+        unit_costs = np.zeros(0)
+        unit_dsel = np.zeros(0, np.int64)
+    else:
+        ssp = _ParametricSSP(T, paid_t, paid_u, paid_save, k_max)
+        unit_costs, unit_dsel = ssp.run(k_max)
+    cum_save = np.concatenate([[0.0], np.cumsum(-unit_costs)])
+    cum_sel = np.concatenate([[0], np.cumsum(unit_dsel)])
+    ks = np.clip(budgets - 1, 0, len(unit_costs))
+    alive = budgets >= 1  # B < 1 cannot even keep free (adjacent) repeats
+    savings = np.where(alive, cum_save[ks] + free_save, 0.0)
+    hits = np.where(alive, cum_sel[ks] + n_free, 0).astype(np.int64)
+    return SweepResult(budgets=budgets, dollars=total - savings,
+                       savings=savings, hits=hits, total_no_cache=total,
+                       free_hits=n_free, unit_path_costs=unit_costs)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,16 @@ with the minimum score, where
            + w_bel  * (-next_use(i))                 (Belady: evict farthest)
            + w_cb   * (-(s_i * gap_i / c_i))         (cost-aware Belady)
 
+Because policies are just weight vectors, a whole policy *panel* batches as
+one more vmap axis: `sweep_jax` compiles a single (policies x price-vectors
+x budgets) grid program, the device-resident form of the paper's regime
+maps (DESIGN.md §3).
+
+Victim selection dispatches through `kernels.evict_argmin`: the Pallas TPU
+kernel on TPU backends (`use_pallas=None` -> `on_tpu()`), the pure-jnp
+reduction elsewhere; both implement the same lexicographic argmin and are
+checked step-for-step against each other in tests/test_policies_jax.py.
+
 Uniform-size mode (the paper's exact-reference regime): one eviction per
 miss, no data-dependent loop. Variable sizes stay on the host reference
 (`policies.py`); see DESIGN.md §3.
@@ -26,14 +36,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .trace import next_use_indices
+from ..kernels import ops
 
-__all__ = ["PolicyWeights", "POLICY_WEIGHTS", "simulate_jax", "sweep_jax"]
+__all__ = ["PolicyWeights", "POLICY_WEIGHTS", "simulate_jax", "sweep_jax",
+           "stack_policy_weights"]
 
 _BIG = jnp.float32(3.4e38)
 
@@ -62,6 +75,15 @@ POLICY_WEIGHTS: dict[str, PolicyWeights] = {
 }
 
 
+def stack_policy_weights(policies: Sequence[str | PolicyWeights]) -> np.ndarray:
+    """(Q, 6) weight stack for a policy panel — the third sweep axis."""
+    rows = []
+    for p in policies:
+        w = POLICY_WEIGHTS[p] if isinstance(p, str) else p
+        rows.append(w.as_array())
+    return np.stack(rows)
+
+
 def _static_score(w, t, freq_i, infl, c_over_s):
     """Frozen-at-touch score components (LRU / LFU / GDS / GDSF)."""
     return (w[0] * t + w[1] * freq_i
@@ -69,14 +91,22 @@ def _static_score(w, t, freq_i, infl, c_over_s):
             + w[3] * (infl + freq_i * c_over_s))
 
 
-@functools.partial(jax.jit, static_argnames=("num_objects",))
-def _simulate(ids, nxt, costs, sizes, capacity, weights, num_objects: int):
+@functools.partial(jax.jit,
+                   static_argnames=("num_objects", "use_pallas", "trace_steps"))
+def _simulate(ids, nxt, costs, sizes, capacity, weights, num_objects: int,
+              use_pallas: bool = False, trace_steps: bool = False):
     """One policy replay, uniform-size pages. Returns (dollars, hits).
 
     Victim = lexicographic argmin of (score, last_touch) over cached objects,
     where score = static (frozen at touch) + dynamic (Belady / cost-Belady,
     evaluated at eviction time from the stored next-use index). This exactly
     matches the heap key of the Python reference.
+
+    `use_pallas` routes the victim argmin through the Pallas TPU kernel
+    (`kernels.evict_argmin`) instead of the jnp reduction — the replay
+    engine's eviction hot path on real TPUs. `trace_steps` additionally
+    returns the per-step (dollars, hits) trajectory for step-for-step
+    equivalence tests.
     """
     T = ids.shape[0]
     n = num_objects
@@ -105,11 +135,16 @@ def _simulate(ids, nxt, costs, sizes, capacity, weights, num_objects: int):
 
         # victim: lexicographic argmin of (score, last_touch) among cached\{i}
         mask = cached.at[i].set(False)
-        scores = jnp.where(mask, total_scores(static, stored_nxt, tf), _BIG)
-        min_s = jnp.min(scores)
-        tie = scores <= min_s  # exact equality; _BIG rows excluded by min
-        victim = jnp.argmin(jnp.where(tie, touch, INT_BIG))
-        victim_score = scores[victim]
+        raw = total_scores(static, stored_nxt, tf)
+        if use_pallas:
+            victim, victim_score = ops.evict_argmin(raw, touch, mask,
+                                                    use_pallas=True)
+        else:
+            scores = jnp.where(mask, raw, _BIG)
+            min_s = jnp.min(scores)
+            tie = scores <= min_s  # exact equality; _BIG rows excluded by min
+            victim = jnp.argmin(jnp.where(tie, touch, INT_BIG))
+            victim_score = scores[victim]
         full = used >= capacity
 
         # eq.-(2) semantics: a miss always inserts (mandatory displacement)
@@ -127,56 +162,103 @@ def _simulate(ids, nxt, costs, sizes, capacity, weights, num_objects: int):
         static = static.at[i].set(my_static)
         stored_nxt = stored_nxt.at[i].set(nu)
         touch = touch.at[i].set(t)
-        return (cached, static, stored_nxt, touch, freq, used, infl,
-                dollars, hits), None
+        new_state = (cached, static, stored_nxt, touch, freq, used, infl,
+                     dollars, hits)
+        return new_state, ((dollars, hits) if trace_steps else None)
 
     init = (jnp.zeros(n, bool), jnp.full(n, _BIG, jnp.float32),
             jnp.full(n, T, jnp.int32), jnp.zeros(n, jnp.int32),
             jnp.zeros(n, jnp.int32), jnp.int32(0), jnp.float32(0.0),
             jnp.float32(0.0), jnp.int32(0))
     ts = jnp.arange(T, dtype=jnp.int32)
-    final, _ = jax.lax.scan(step, init, (ts, ids, nxt))
+    final, traj = jax.lax.scan(step, init, (ts, ids, nxt))
+    if trace_steps:
+        return final[-2], final[-1], traj
     return final[-2], final[-1]
+
+
+def _resolve_use_pallas(use_pallas: bool | None) -> bool:
+    """None -> the backend default: Pallas kernel on TPU, jnp elsewhere."""
+    return ops.on_tpu() if use_pallas is None else use_pallas
 
 
 def simulate_jax(policy: str, ids: np.ndarray, costs: np.ndarray,
                  capacity_pages: int, num_objects: int | None = None,
-                 sizes: np.ndarray | None = None):
+                 sizes: np.ndarray | None = None,
+                 use_pallas: bool | None = None):
     """Replay one policy on a uniform-size page trace. Returns (dollars, hits).
 
     `sizes` only affects the cost-density terms of GDS/GDSF/cost-Belady
     (the cache itself is page-uniform, matching the exact reference)."""
     ids = np.asarray(ids, dtype=np.int32)
     n = int(num_objects if num_objects is not None else ids.max() + 1)
-    nxt = next_use_indices(ids, n).astype(np.int32)
+    nxt = next_use_indices(ids).astype(np.int32)
     w = POLICY_WEIGHTS[policy].as_array()
     s = np.ones(n, np.float32) if sizes is None else np.asarray(sizes, np.float32)
     d, h = _simulate(jnp.asarray(ids), jnp.asarray(nxt),
                      jnp.asarray(costs, dtype=jnp.float32), jnp.asarray(s),
-                     jnp.int32(capacity_pages), jnp.asarray(w), n)
+                     jnp.int32(capacity_pages), jnp.asarray(w), n,
+                     _resolve_use_pallas(use_pallas))
     return float(d), int(h)
 
 
-def sweep_jax(policy: str, ids: np.ndarray, cost_matrix: np.ndarray,
-              budgets: np.ndarray, num_objects: int | None = None,
-              sizes: np.ndarray | None = None) -> np.ndarray:
-    """Batched replay: vmap over (price-vector x budget) cells on device.
+def _sweep_grid(weight_stack, ids, nxt, cost_matrix, sizes, budgets,
+                num_objects: int, use_pallas: bool):
+    """(Q policies x P prices x K budgets) grid as one compiled program."""
 
-    cost_matrix: (P, N) per-object costs for P price vectors.
-    budgets:     (K,) page budgets.
-    Returns dollars array of shape (P, K).
-    """
-    ids = np.asarray(ids, dtype=np.int32)
-    n = int(num_objects if num_objects is not None else ids.max() + 1)
-    nxt = jnp.asarray(next_use_indices(ids, n).astype(np.int32))
-    w = jnp.asarray(POLICY_WEIGHTS[policy].as_array())
-    s = jnp.ones(n, jnp.float32) if sizes is None else jnp.asarray(sizes, jnp.float32)
-    idsj = jnp.asarray(ids)
-
-    def one(costs, B):
-        d, _ = _simulate(idsj, nxt, costs, s, B, w, n)
+    def one(w, costs, B):
+        d, _ = _simulate(ids, nxt, costs, sizes, B, w, num_objects,
+                         use_pallas)
         return d
 
-    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
-    return np.asarray(f(jnp.asarray(cost_matrix, dtype=jnp.float32),
-                        jnp.asarray(budgets, dtype=jnp.int32)))
+    f = jax.vmap(                                   # policies
+        jax.vmap(                                   # price vectors
+            jax.vmap(one, in_axes=(None, None, 0)),  # budgets
+            in_axes=(None, 0, None)),
+        in_axes=(0, None, None))
+    return f(weight_stack, cost_matrix, budgets)
+
+
+@functools.cache
+def _sweep_grid_jit(donate: bool):
+    """Jit the grid once per donation mode. The stacked weights and the
+    price matrix are consumed by the sweep (freshly staged per call), so on
+    accelerators their buffers are donated; CPU jit would only warn."""
+    return jax.jit(_sweep_grid,
+                   static_argnames=("num_objects", "use_pallas"),
+                   donate_argnums=(0, 3) if donate else ())
+
+
+def sweep_jax(policy, ids: np.ndarray, cost_matrix: np.ndarray,
+              budgets: np.ndarray, num_objects: int | None = None,
+              sizes: np.ndarray | None = None,
+              use_pallas: bool | None = None) -> np.ndarray:
+    """Batched replay of a (policy x price-vector x budget) grid on device.
+
+    policy:      one policy name -> dollars of shape (P, K);
+                 a sequence of names / `PolicyWeights` (or a pre-stacked
+                 (Q, 6) float array) -> dollars of shape (Q, P, K), all Q
+                 policies replayed inside the SAME compiled scan program.
+    cost_matrix: (P, N) per-object costs for P price vectors.
+    budgets:     (K,) page budgets.
+    """
+    single = isinstance(policy, str)
+    if single:
+        stack = stack_policy_weights([policy])
+    elif isinstance(policy, np.ndarray) or isinstance(policy, jax.Array):
+        stack = np.asarray(policy, dtype=np.float32)
+        if stack.ndim != 2 or stack.shape[1] != 6:
+            raise ValueError("weight stack must have shape (Q, 6)")
+    else:
+        stack = stack_policy_weights(policy)
+    ids = np.asarray(ids, dtype=np.int32)
+    n = int(num_objects if num_objects is not None else ids.max() + 1)
+    nxt = jnp.asarray(next_use_indices(ids).astype(np.int32))
+    s = jnp.ones(n, jnp.float32) if sizes is None else jnp.asarray(sizes, jnp.float32)
+    fn = _sweep_grid_jit(jax.default_backend() != "cpu")
+    out = fn(jnp.asarray(stack), jnp.asarray(ids), nxt,
+             jnp.asarray(cost_matrix, dtype=jnp.float32), s,
+             jnp.asarray(budgets, dtype=jnp.int32), n,
+             _resolve_use_pallas(use_pallas))
+    out = np.asarray(out)
+    return out[0] if single else out

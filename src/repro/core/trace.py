@@ -139,14 +139,19 @@ def next_use_indices(ids: np.ndarray, n_objects: int | None = None) -> np.ndarra
     """next(t): index of the next request of the same object, or T if none.
 
     Reference (numpy) implementation; the Pallas kernel `kernels/next_use`
-    mirrors it and is verified against this in tests.
+    mirrors it and is verified against this in tests. Vectorized: a stable
+    sort groups each object's accesses in time order, so the successor
+    within a group IS the next use.
     """
     ids = np.asarray(ids)
     T = ids.shape[0]
-    n = int(ids.max()) + 1 if n_objects is None else n_objects
-    nxt = np.full(T, T, dtype=np.int64)
-    last_seen = np.full(n, T, dtype=np.int64)
-    for t in range(T - 1, -1, -1):
-        nxt[t] = last_seen[ids[t]]
-        last_seen[ids[t]] = t
+    if T == 0:
+        return np.zeros(0, dtype=np.int64)
+    order = np.argsort(ids, kind="stable")      # time order within each id
+    sorted_ids = ids[order]
+    succ = np.full(T, T, dtype=np.int64)
+    same = sorted_ids[1:] == sorted_ids[:-1]
+    succ[:-1][same] = order[1:][same]
+    nxt = np.empty(T, dtype=np.int64)
+    nxt[order] = succ
     return nxt

@@ -22,6 +22,10 @@ __all__ = ["evict_argmin_pallas"]
 _BIG = 3.4e38
 _INT_BIG = 2**31 - 1
 
+# jax >= 0.5 renamed pltpu.TPUMemorySpace -> pltpu.MemorySpace; the SMEM
+# constant exists under both spellings.
+_SMEM = getattr(pltpu, "MemorySpace", getattr(pltpu, "TPUMemorySpace", None)).SMEM
+
 
 def _kernel(scores_ref, touch_ref, mask_ref, idx_out, val_out,
             best_ref, *, block_n: int, num_blocks: int):
@@ -80,8 +84,8 @@ def evict_argmin_pallas(scores: jax.Array, touch: jax.Array, mask: jax.Array,
         in_specs=[pl.BlockSpec((block_n,), lambda g: (g,)),
                   pl.BlockSpec((block_n,), lambda g: (g,)),
                   pl.BlockSpec((block_n,), lambda g: (g,))],
-        out_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
-                   pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM)],
+        out_specs=[pl.BlockSpec(memory_space=_SMEM),
+                   pl.BlockSpec(memory_space=_SMEM)],
         out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
                    jax.ShapeDtypeStruct((1,), jnp.float32)],
         scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],

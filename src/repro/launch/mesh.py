@@ -10,20 +10,34 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_host_mesh"]
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """`axis_types` kwarg for `jax.make_mesh`, across JAX versions.
+
+    `jax.sharding.AxisType` (explicit-sharding API) only exists from
+    jax 0.5.x; older versions default every axis to Auto, which is what
+    we request anyway — so omit the kwarg there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """`jax.make_mesh` with all axes in Auto mode, version-compatible."""
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU smoke/examples (same axis names)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, n), ("data", "model"))

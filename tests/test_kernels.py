@@ -1,8 +1,11 @@
-"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles."""
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles.
+
+Property-based (hypothesis) variants live in test_kernels_property.py so this
+module collects even where hypothesis is not installed.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.core.trace import next_use_indices
@@ -67,18 +70,6 @@ def test_interval_occupancy_shapes(T, block_t, dtype):
         jnp.asarray(deltas).astype(dtype), block_t=block_t))
     want = np.cumsum(deltas.astype(np.float32))
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.data())
-def test_next_use_property(data):
-    T = data.draw(st.integers(1, 300))
-    N = data.draw(st.integers(1, 20))
-    block = data.draw(st.sampled_from([16, 64, 128]))
-    ids = np.array(data.draw(st.lists(st.integers(0, N - 1),
-                                      min_size=T, max_size=T)), np.int32)
-    got = np.asarray(ops.next_use(jnp.asarray(ids), N, block_t=block))
-    np.testing.assert_array_equal(got, next_use_indices(ids, N))
 
 
 def test_occupancy_of_opt_schedule_respects_budget():

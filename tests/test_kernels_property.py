@@ -1,0 +1,27 @@
+"""Hypothesis property tests for the Pallas kernels.
+
+Guarded with `pytest.importorskip`: hypothesis is optional in the container,
+and collection must not die where it is absent (the fixed-seed sweeps in
+test_kernels.py cover the same oracles either way).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.trace import next_use_indices  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_next_use_property(data):
+    T = data.draw(st.integers(1, 300))
+    N = data.draw(st.integers(1, 20))
+    block = data.draw(st.sampled_from([16, 64, 128]))
+    ids = np.array(data.draw(st.lists(st.integers(0, N - 1),
+                                      min_size=T, max_size=T)), np.int32)
+    got = np.asarray(ops.next_use(jnp.asarray(ids), N, block_t=block))
+    np.testing.assert_array_equal(got, next_use_indices(ids, N))

@@ -1,12 +1,18 @@
 """The paper's core claim: the interval LP / min-cost flow is the *exact*
 dollar-optimum for uniform-size caches — validated against brute force
-("to the cent ... on 250 random instances")."""
+("to the cent ... on 250 random instances").
+
+Property-based (hypothesis) variants live in test_opt_exact_property.py so
+this module collects even where hypothesis is not installed.
+"""
+import time
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (dp_opt_uniform, enumerate_opt_uniform,
-                        exact_opt_uniform, lp_opt, simulate)
+                        exact_opt_uniform, exact_opt_uniform_sweep, lp_opt,
+                        simulate)
 from repro.core.trace import Trace
 
 
@@ -71,23 +77,6 @@ def test_lp_matches_flow_uniform():
         assert np.all((x < 1e-6) | (x > 1 - 1e-6))
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.data())
-def test_flow_equals_dp_property(data):
-    """Hypothesis: on any tiny instance, flow == state-space DP."""
-    T = data.draw(st.integers(3, 11))
-    N = data.draw(st.integers(1, 4))
-    B = data.draw(st.integers(1, 3))
-    ids = np.array(data.draw(st.lists(st.integers(0, N - 1),
-                                      min_size=T, max_size=T)), np.int32)
-    costs = np.array(data.draw(st.lists(
-        st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False),
-        min_size=N, max_size=N)))
-    flow = exact_opt_uniform(ids, costs, B).dollars
-    dp = dp_opt_uniform(ids, costs, B)
-    assert flow == pytest.approx(dp, rel=1e-6, abs=1e-6)
-
-
 def test_opt_lower_bounds_every_policy():
     rng = np.random.default_rng(3)
     for _ in range(10):
@@ -129,6 +118,81 @@ def test_flow_scales():
     # spot-check against the sparse LP
     lp_dollars, _, _, _ = lp_opt(ids, costs, np.ones(N), float(B))
     assert lp_dollars == pytest.approx(r.dollars, rel=1e-6)
+
+
+# ---- parametric budget sweep ---------------------------------------------
+
+def test_sweep_equals_per_budget_random_traces():
+    """One warm-started SSP run == K independent solves, dollar for dollar."""
+    rng = np.random.default_rng(11)
+    for trial in range(6):
+        T = int(rng.integers(200, 1500))
+        N = int(rng.integers(10, 120))
+        ids = rng.integers(0, N, T).astype(np.int32)
+        costs = rng.lognormal(0, 2, N)
+        budgets = np.unique(rng.integers(1, max(3, N), size=6)).astype(np.int64)
+        sweep = exact_opt_uniform_sweep(ids, costs, budgets)
+        for B, d, h in zip(budgets, sweep.dollars, sweep.hits):
+            ref = exact_opt_uniform(ids, costs, int(B))
+            assert d == pytest.approx(ref.dollars, rel=1e-6, abs=1e-9), \
+                f"trial={trial} B={B}"
+            assert int(h) == ref.hits, f"trial={trial} B={B}"
+
+
+def test_sweep_unit_path_costs_monotone():
+    """SSP augments along non-decreasing path costs — the property that
+    makes every budget a prefix of the same run."""
+    rng = np.random.default_rng(12)
+    ids = rng.integers(0, 50, 2000).astype(np.int32)
+    costs = rng.lognormal(0, 2, 50)
+    sweep = exact_opt_uniform_sweep(ids, costs, np.array([40]))
+    pc = sweep.unit_path_costs
+    assert (pc < 0).all()
+    assert (np.diff(pc) >= -1e-9 * np.abs(pc[:-1])).all()
+    # dollars are non-increasing and savings non-decreasing in budget
+    full = exact_opt_uniform_sweep(ids, costs, np.arange(1, 41))
+    assert (np.diff(full.dollars) <= 1e-9).all()
+    assert (np.diff(full.hits) >= 0).all()
+
+
+def test_sweep_edge_cases():
+    rng = np.random.default_rng(13)
+    ids = rng.integers(0, 8, 60).astype(np.int32)
+    costs = rng.lognormal(0, 1, 8)
+    # budget 1 keeps only free (adjacent-repeat) gaps; budget 0 keeps nothing
+    sweep = exact_opt_uniform_sweep(ids, costs, np.array([0, 1, 1000]))
+    r0 = exact_opt_uniform(ids, costs, 0)
+    r1 = exact_opt_uniform(ids, costs, 1)
+    rbig = exact_opt_uniform(ids, costs, 1000)
+    assert sweep.dollars[0] == pytest.approx(r0.dollars)
+    assert sweep.dollars[1] == pytest.approx(r1.dollars)
+    # beyond saturation the optimum flattens at keep-everything
+    assert sweep.dollars[2] == pytest.approx(rbig.dollars, rel=1e-9)
+    assert sweep.total_no_cache == pytest.approx(r1.total_no_cache)
+    with pytest.raises(ValueError):
+        exact_opt_uniform_sweep(ids, costs, np.zeros((0,), np.int64))
+
+
+def test_sweep_is_faster_than_independent_solves():
+    """The headline perf property at a CI-friendly scale: the sweep costs
+    about one largest solve, not sum-of-solves (full 100k-scale >=5x bound
+    is asserted in benchmarks/bench_flow_scale.py)."""
+    rng = np.random.default_rng(14)
+    T, N = 20_000, 800
+    ids = rng.integers(0, N, T).astype(np.int32)
+    costs = rng.lognormal(0, 2, N)
+    budgets = np.linspace(4, 48, 8).astype(np.int64)
+    t0 = time.perf_counter()
+    sweep = exact_opt_uniform_sweep(ids, costs, budgets)
+    dt_sweep = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = [exact_opt_uniform(ids, costs, int(B)).dollars for B in budgets]
+    dt_ind = time.perf_counter() - t0
+    for d, r in zip(sweep.dollars, ref):
+        assert d == pytest.approx(r, rel=1e-6)
+    # ~4x asymptotically at this grid; demand 2x to stay timing-robust
+    assert dt_ind > 2.0 * dt_sweep, \
+        f"sweep {dt_sweep:.2f}s vs independent {dt_ind:.2f}s"
 
 
 def test_selected_schedule_is_feasible():

@@ -1,0 +1,50 @@
+"""Hypothesis property tests for the exact solvers.
+
+Guarded with `pytest.importorskip`: hypothesis is optional in the container,
+and collection must not die where it is absent (the 250-instance fixed-seed
+brute-force sweep in test_opt_exact.py covers the same claim either way).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import dp_opt_uniform, exact_opt_uniform  # noqa: E402
+from repro.core.opt_exact import exact_opt_uniform_sweep  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_flow_equals_dp_property(data):
+    """Hypothesis: on any tiny instance, flow == state-space DP."""
+    T = data.draw(st.integers(3, 11))
+    N = data.draw(st.integers(1, 4))
+    B = data.draw(st.integers(1, 3))
+    ids = np.array(data.draw(st.lists(st.integers(0, N - 1),
+                                      min_size=T, max_size=T)), np.int32)
+    costs = np.array(data.draw(st.lists(
+        st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False),
+        min_size=N, max_size=N)))
+    flow = exact_opt_uniform(ids, costs, B).dollars
+    dp = dp_opt_uniform(ids, costs, B)
+    assert flow == pytest.approx(dp, rel=1e-6, abs=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_sweep_equals_per_budget_property(data):
+    """Hypothesis: the parametric sweep == independent per-budget solves."""
+    T = data.draw(st.integers(3, 40))
+    N = data.draw(st.integers(1, 8))
+    ids = np.array(data.draw(st.lists(st.integers(0, N - 1),
+                                      min_size=T, max_size=T)), np.int32)
+    costs = np.array(data.draw(st.lists(
+        st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False),
+        min_size=N, max_size=N)))
+    budgets = np.array(sorted(data.draw(st.sets(st.integers(1, 10),
+                                                min_size=1, max_size=5))))
+    sweep = exact_opt_uniform_sweep(ids, costs, budgets)
+    for B, d in zip(budgets, sweep.dollars):
+        ref = exact_opt_uniform(ids, costs, int(B)).dollars
+        assert d == pytest.approx(ref, rel=1e-9, abs=1e-9)

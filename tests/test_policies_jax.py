@@ -1,9 +1,12 @@
 """JAX lax.scan policy simulator == Python reference, step for step."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import Trace, simulate
-from repro.core.policies_jax import POLICY_WEIGHTS, simulate_jax, sweep_jax
+from repro.core.policies_jax import (POLICY_WEIGHTS, _simulate, simulate_jax,
+                                     stack_policy_weights, sweep_jax)
+from repro.core.trace import next_use_indices
 
 
 def _rand(rng, T, N):
@@ -47,3 +50,74 @@ def test_sweep_shape_and_consistency():
 def test_all_policies_registered():
     assert set(POLICY_WEIGHTS) == {"lru", "lfu", "gds", "gdsf",
                                    "belady", "cost_belady"}
+
+
+def test_multi_policy_sweep_matches_per_cell():
+    """The (policies x prices x budgets) grid — one compiled program —
+    reproduces every per-cell simulate_jax result exactly."""
+    rng = np.random.default_rng(7)
+    ids, costs = _rand(rng, 250, 24)
+    cost_matrix = np.stack([costs, 8 * costs, costs / 4, 64 * costs])
+    budgets = np.array([2, 4, 8, 12])
+    policies = list(POLICY_WEIGHTS)
+    out = sweep_jax(policies, ids, cost_matrix, budgets, num_objects=24)
+    assert out.shape == (6, 4, 4)
+    for q, pol in enumerate(policies):
+        for p in range(4):
+            for k, B in enumerate(budgets):
+                d, _ = simulate_jax(pol, ids, cost_matrix[p], int(B),
+                                    num_objects=24)
+                assert out[q, p, k] == np.float32(d), \
+                    f"cell ({pol}, price {p}, B={B})"
+
+
+def test_multi_policy_sweep_accepts_weight_stack():
+    rng = np.random.default_rng(8)
+    ids, costs = _rand(rng, 120, 10)
+    stack = stack_policy_weights(["lru", "belady"])
+    out = sweep_jax(stack, ids, costs[None, :], np.array([3]), num_objects=10)
+    assert out.shape == (2, 1, 1)
+    ref = sweep_jax(["lru", "belady"], ids, costs[None, :], np.array([3]),
+                    num_objects=10)
+    np.testing.assert_array_equal(out, ref)
+    with pytest.raises(ValueError):
+        sweep_jax(np.zeros((2, 5), np.float32), ids, costs[None, :],
+                  np.array([3]), num_objects=10)
+
+
+@pytest.mark.parametrize("policy", ["lru", "gdsf", "cost_belady"])
+def test_pallas_victim_path_matches_jnp_step_for_step(policy):
+    """`_simulate` with the Pallas evict_argmin kernel (interpret mode on
+    CPU) must track the jnp victim path through the WHOLE trajectory, not
+    just the final totals."""
+    rng = np.random.default_rng(hash(policy) % 2**32)
+    T, N, B = 150, 16, 5
+    ids, costs = _rand(rng, T, N)
+    nxt = next_use_indices(ids).astype(np.int32)
+    args = (jnp.asarray(ids), jnp.asarray(nxt),
+            jnp.asarray(costs, jnp.float32), jnp.ones(N, jnp.float32),
+            jnp.int32(B), jnp.asarray(POLICY_WEIGHTS[policy].as_array()), N)
+    d_j, h_j, (dol_j, hit_j) = _simulate(*args, use_pallas=False,
+                                         trace_steps=True)
+    d_p, h_p, (dol_p, hit_p) = _simulate(*args, use_pallas=True,
+                                         trace_steps=True)
+    np.testing.assert_array_equal(np.asarray(hit_j), np.asarray(hit_p))
+    np.testing.assert_array_equal(np.asarray(dol_j), np.asarray(dol_p))
+    assert float(d_j) == float(d_p) and int(h_j) == int(h_p)
+
+
+def test_pallas_victim_path_full_api():
+    """End-to-end through simulate_jax/sweep_jax with use_pallas=True."""
+    rng = np.random.default_rng(9)
+    ids, costs = _rand(rng, 100, 12)
+    for policy in ("lfu", "gds", "belady"):
+        d1, h1 = simulate_jax(policy, ids, costs, 4, num_objects=12,
+                              use_pallas=False)
+        d2, h2 = simulate_jax(policy, ids, costs, 4, num_objects=12,
+                              use_pallas=True)
+        assert (d1, h1) == (d2, h2), policy
+    out_j = sweep_jax(["lru", "gdsf"], ids, costs[None, :], np.array([3, 6]),
+                      num_objects=12, use_pallas=False)
+    out_p = sweep_jax(["lru", "gdsf"], ids, costs[None, :], np.array([3, 6]),
+                      num_objects=12, use_pallas=True)
+    np.testing.assert_array_equal(out_j, out_p)
