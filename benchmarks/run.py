@@ -12,8 +12,9 @@ from __future__ import annotations
 import sys
 
 from . import (bench_cdn, bench_contention, bench_costfoo, bench_crossover,
-               bench_exact, bench_flow_scale, bench_heterogeneity,
-               bench_kernels, bench_policy_throughput, common)
+               bench_exact, bench_flow_scale, bench_governor,
+               bench_heterogeneity, bench_kernels, bench_policy_throughput,
+               common)
 
 ALL = {
     "exact": bench_exact.main,                    # §2 integrality/brute force
@@ -25,6 +26,7 @@ ALL = {
     "flow_scale": bench_flow_scale.main,          # §6 scale + parametric sweep
     "policy_throughput": bench_policy_throughput.main,  # JAX replay engine
     "kernels": bench_kernels.main,                # Pallas vs oracle
+    "governor": bench_governor.main,              # online governance (§8)
 }
 
 

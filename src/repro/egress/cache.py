@@ -5,21 +5,52 @@ GDS / GDSF — the online subset of core/policies.py), byte-capacity budget,
 billing-faithful accounting, and an `audit()` that replays the observed
 access trace against the exact offline dollar-optimum (core/opt_exact,
 cost-FOO) — the framework-native use of the paper's reference.
+
+Governance surface (DESIGN.md §8): every access emits an `AccessEvent` to
+registered listeners (the shadow panel / windowed audit / metrics of
+`repro.online` subscribe here without touching the billed path);
+`set_policy` hot-swaps the replacement policy in place, preserving cache
+contents so a swap never re-bills; an optional admission controller can
+veto insertions (fetch-through, the s*-aware bypass of eq. 3).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional
+import itertools
+from typing import Callable, Optional, Protocol
 
 import numpy as np
 
-from repro.core import (PRICE_VECTORS, Trace, cost_foo, exact_opt_uniform,
-                        heterogeneity, regret)
-from repro.core.pricing import PriceVector
+from repro.core import (Trace, cost_foo, exact_opt_uniform,
+                        exact_opt_uniform_sweep, heterogeneity, regret)
 from .store import ObjectStore
 
-__all__ = ["EgressCache", "AuditReport"]
+__all__ = ["EgressCache", "AuditReport", "AccessEvent", "AdmissionController",
+           "ONLINE_POLICIES"]
+
+ONLINE_POLICIES = ("lru", "lfu", "gds", "gdsf")
+
+_cache_counter = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessEvent:
+    """One cache access, as seen by governance listeners (shadow panel,
+    windowed audit, metrics). Carries everything a metadata-only replica
+    needs — no object bytes, no store traffic."""
+    key: str
+    nbytes: int
+    hit: bool
+    miss_cost: float   # c = f + s*e at the price in effect NOW
+    policy: str
+    clock: int
+
+
+class AdmissionController(Protocol):
+    def admit(self, key: str, nbytes: int, freq: int) -> bool:
+        """True = insert into the cache; False = serve fetch-through."""
+        ...
 
 
 @dataclasses.dataclass
@@ -34,6 +65,8 @@ class AuditReport:
     mean_object_bytes: float
     requests: int
     hit_rate: float
+    # exact OPT-dollars per budget when a grid was requested (uniform sizes):
+    opt_by_budget: Optional[dict[int, float]] = None
 
     def summary(self) -> str:
         return (f"[egress audit] policy={self.policy} "
@@ -47,14 +80,25 @@ class AuditReport:
 
 
 class EgressCache:
-    """Byte-budgeted local cache over an ObjectStore, dollar-aware."""
+    """Byte-budgeted local cache over an ObjectStore, dollar-aware.
+
+    Bills through its OWN consumer meter (`store.meter_for(consumer)`), so
+    `audit()` scores exactly the misses this cache caused — other consumers
+    sharing the store (warm-up puts, sibling caches) never pollute it.
+    """
 
     def __init__(self, store: ObjectStore, capacity_bytes: float,
-                 policy: str = "gdsf"):
-        assert policy in ("lru", "lfu", "gds", "gdsf"), policy
+                 policy: str = "gdsf", consumer: Optional[str] = None,
+                 admission: Optional[AdmissionController] = None,
+                 metrics=None):
+        assert policy in ONLINE_POLICIES, policy
         self.store = store
         self.capacity = float(capacity_bytes)
         self.policy = policy
+        self.consumer = consumer or f"egress_cache_{next(_cache_counter)}"
+        self.meter = store.meter_for(self.consumer)
+        self.admission = admission
+        self.metrics = metrics           # duck-typed: .inc(name, value=1)
         self.used = 0.0
         self._data: dict[str, bytes] = {}
         self._prio: dict[str, tuple[float, int]] = {}
@@ -62,14 +106,20 @@ class EgressCache:
         self._freq: dict[str, int] = {}
         self._inflation = 0.0
         self._clock = 0
+        self._listeners: list[Callable[[AccessEvent], None]] = []
         # access log for offline audit
         self._trace_keys: list[str] = []
         self.hits = 0
         self.misses = 0
+        self.policy_swaps = 0
+        self.bypasses = 0
 
     # ------------------------------------------------------------------
+    def add_listener(self, fn: Callable[[AccessEvent], None]) -> None:
+        self._listeners.append(fn)
+
     def _miss_cost(self, nbytes: int) -> float:
-        return float(self.store.meter.price.miss_cost(nbytes))
+        return float(self.store.price.miss_cost(nbytes))
 
     def _priority(self, key: str, nbytes: int) -> float:
         dens = self._miss_cost(nbytes) / max(nbytes, 1)
@@ -98,22 +148,65 @@ class EgressCache:
                 self._inflation = pr
 
     # ------------------------------------------------------------------
+    def set_policy(self, policy: str) -> None:
+        """Hot-swap the replacement policy, preserving cache contents.
+
+        Priorities of resident objects are recomputed under the new policy
+        and the heap rebuilt; nothing is evicted or refetched, so the swap
+        itself bills $0 (asserted in tests/test_serve_billing.py)."""
+        assert policy in ONLINE_POLICIES, policy
+        if policy == self.policy:
+            return
+        self.policy = policy
+        self._inflation = 0.0
+        self._heap = []
+        for key, data in self._data.items():
+            pr = self._priority(key, len(data))
+            touch = self._prio[key][1]
+            self._prio[key] = (pr, touch)
+            heapq.heappush(self._heap, (pr, touch, key))
+        self.policy_swaps += 1
+        if self.metrics is not None:
+            self.metrics.inc(f"egress.{self.consumer}.policy_swaps")
+
+    # ------------------------------------------------------------------
     def get(self, key: str) -> bytes:
         self._clock += 1
         self._trace_keys.append(key)
         self._freq[key] = self._freq.get(key, 0) + 1
         if key in self._data:
             self.hits += 1
-            self._touch(key, len(self._data[key]))
-            return self._data[key]
+            data = self._data[key]
+            self._touch(key, len(data))
+            self._emit(key, len(data), hit=True)
+            return data
         self.misses += 1
-        data = self.store.get(key)   # billed fetch
-        if len(data) <= self.capacity:
+        data = self.store.get(key, consumer=self.consumer)   # billed fetch
+        admit = len(data) <= self.capacity
+        if admit and self.admission is not None:
+            admit = self.admission.admit(key, len(data), self._freq[key])
+            if not admit:
+                self.bypasses += 1
+        if admit:
             self._evict_until_fits(len(data))
             self._data[key] = data
             self.used += len(data)
             self._touch(key, len(data))
+        self._emit(key, len(data), hit=False)
         return data
+
+    def _emit(self, key: str, nbytes: int, hit: bool) -> None:
+        if self.metrics is not None:
+            self.metrics.inc(f"egress.{self.consumer}."
+                             + ("hits" if hit else "misses"))
+            if not hit:
+                self.metrics.inc(f"egress.{self.consumer}.bytes_fetched",
+                                 nbytes)
+        if self._listeners:
+            ev = AccessEvent(key, nbytes, hit, self._miss_cost(nbytes),
+                             self.policy, self._clock)
+            for fn in self._listeners:
+                fn(ev)
 
     @property
     def hit_rate(self) -> float:
@@ -121,31 +214,50 @@ class EgressCache:
         return self.hits / total if total else 0.0
 
     # ------------------------------------------------------------------
-    def audit(self, budget_pages: Optional[int] = None) -> AuditReport:
-        """Replay the observed trace against the exact offline reference."""
+    def audit(self, budget_pages: Optional[int] = None,
+              budget_grid=None) -> AuditReport:
+        """Replay the observed trace against the exact offline reference.
+
+        `budget_grid` (uniform sizes only): exact OPT-dollars for every
+        budget in the grid from ONE warm-started parametric SSP run
+        (`exact_opt_uniform_sweep`, DESIGN.md §5.2), reported in
+        `opt_by_budget`; the bracket itself still refers to this cache's
+        own budget. Observed dollars come from this cache's consumer meter
+        — traffic other consumers billed on the shared store is excluded.
+        """
         keys = self._trace_keys
         uniq = {k: i for i, k in enumerate(dict.fromkeys(keys))}
         ids = np.array([uniq[k] for k in keys], np.int32)
         sizes = np.zeros(len(uniq))
         for k, i in uniq.items():
             sizes[i] = self.store.size_of(k)
-        costs = self.store.meter.price.miss_cost(sizes)
+        costs = self.store.price.miss_cost(sizes)
         tr = Trace(ids=ids, sizes=sizes, name="egress_audit")
         uniform = len(set(sizes.tolist())) == 1
+        opt_by_budget = None
         if uniform:
             B = budget_pages or max(1, int(self.capacity // sizes[0]))
-            o = exact_opt_uniform(ids, costs, B)
-            lower = upper = o.dollars
+            if budget_grid is not None:
+                grid = np.unique(np.append(np.asarray(budget_grid, np.int64),
+                                           B))
+                sweep = exact_opt_uniform_sweep(ids, costs, grid)
+                opt_by_budget = {int(b): float(d)
+                                 for b, d in zip(sweep.budgets, sweep.dollars)}
+                lower = upper = opt_by_budget[int(B)]
+            else:
+                o = exact_opt_uniform(ids, costs, B)
+                lower = upper = o.dollars
         else:
             r = cost_foo(tr, costs, self.capacity)
             lower, upper = r.lower, r.upper
-        # the meter billed exactly this cache's misses
-        observed = float(self.store.meter.dollars)
+        # this cache's own bill — NOT the store-wide meter
+        observed = float(self.meter.dollars)
         return AuditReport(
             policy=self.policy, observed_dollars=observed,
             opt_dollars_lower=lower, opt_dollars_upper=upper,
             dollar_regret=regret(observed, lower),
             heterogeneity=heterogeneity(ids, costs),
-            crossover_bytes=self.store.meter.price.crossover_bytes,
+            crossover_bytes=self.store.price.crossover_bytes,
             mean_object_bytes=float(sizes[ids].mean()),
-            requests=len(keys), hit_rate=self.hit_rate)
+            requests=len(keys), hit_rate=self.hit_rate,
+            opt_by_budget=opt_by_budget)

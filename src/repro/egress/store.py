@@ -4,15 +4,19 @@ Every GET is billed `f + s_i * e` per the paper's eq. (1). The framework's
 data pipeline, checkpoint restore path, and serving prefix cache all fetch
 through this interface, so training/serving runs produce real billing
 traces that the offline reference (core/) can audit.
+
+Billing is attributed twice: once on the store-wide `meter`, and once on a
+per-consumer meter (`meter_for(name)`) when the GET names its consumer —
+so a cache's audit can score exactly the dollars *it* caused, not traffic
+from other consumers sharing the store (DESIGN.md §8). Dollars accrue at
+the price in effect when each GET happens, so `set_price` (a mid-stream
+cloud repricing) never rewrites history.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import threading
 from typing import Callable, Optional
-
-import numpy as np
 
 from repro.core.pricing import PRICE_VECTORS, PriceVector
 
@@ -25,15 +29,12 @@ class BillingMeter:
     gets: int = 0
     puts: int = 0
     bytes_egressed: float = 0.0
-
-    @property
-    def dollars(self) -> float:
-        return (self.gets * self.price.get_fee
-                + self.bytes_egressed * self.price.egress_per_byte)
+    dollars: float = 0.0  # accrued at the price in effect at each GET
 
     def record_get(self, nbytes: float):
         self.gets += 1
         self.bytes_egressed += nbytes
+        self.dollars += float(self.price.miss_cost(nbytes))
 
     def snapshot(self) -> dict:
         return dict(gets=self.gets, puts=self.puts,
@@ -52,9 +53,39 @@ class ObjectStore:
         if isinstance(price, str):
             price = PRICE_VECTORS[price]
         self.meter = BillingMeter(price)
+        self._consumer_meters: dict[str, BillingMeter] = {}
         self._data: dict[str, bytes] = {}
         self._lazy: dict[str, tuple[int, Callable[[], bytes]]] = {}
         self._lock = threading.Lock()
+
+    # ---- pricing ----------------------------------------------------------
+    @property
+    def price(self) -> PriceVector:
+        return self.meter.price
+
+    def set_price(self, price: PriceVector | str) -> None:
+        """Swap the billing vector mid-stream (cloud repricing). Already-
+        accrued dollars are untouched; future GETs bill at the new rates."""
+        if isinstance(price, str):
+            price = PRICE_VECTORS[price]
+        with self._lock:
+            self.meter.price = price
+            for m in self._consumer_meters.values():
+                m.price = price
+
+    # ---- per-consumer attribution -----------------------------------------
+    def meter_for(self, consumer: str) -> BillingMeter:
+        """The meter that bills only GETs naming `consumer`."""
+        with self._lock:
+            m = self._consumer_meters.get(consumer)
+            if m is None:
+                m = self._consumer_meters[consumer] = BillingMeter(self.meter.price)
+            return m
+
+    def consumer_snapshot(self) -> dict:
+        """Per-consumer billing breakdown (dollars sum to meter.dollars when
+        every GET names a consumer)."""
+        return {name: m.snapshot() for name, m in self._consumer_meters.items()}
 
     # ---- producer side -----------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
@@ -68,7 +99,7 @@ class ObjectStore:
             self._lazy[key] = (nbytes, producer)
 
     # ---- consumer side (billed) ---------------------------------------------
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, consumer: Optional[str] = None) -> bytes:
         with self._lock:
             if key in self._data:
                 data = self._data[key]
@@ -77,6 +108,12 @@ class ObjectStore:
             else:
                 raise KeyError(key)
             self.meter.record_get(len(data))
+            if consumer is not None:
+                m = self._consumer_meters.get(consumer)
+                if m is None:
+                    m = self._consumer_meters[consumer] = \
+                        BillingMeter(self.meter.price)
+                m.record_get(len(data))
             return data
 
     def size_of(self, key: str) -> int:

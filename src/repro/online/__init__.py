@@ -1,0 +1,16 @@
+# Online dollar-governance over the egress stack (DESIGN.md §8):
+#   metrics   — process-local registry all layers publish through (JSON export)
+#   shadow    — metadata-only shadow panel: counterfactual $ per policy, $0 egress
+#   window    — ring-buffered exact audit: live OPT-dollar bracket + regret
+#   admission — s*-aware bypass/keep rule (eq. 3 as an admission controller)
+#   governor  — hysteresis policy hot-swap driven by windowed shadow dollars
+from .metrics import MetricsRegistry
+from .shadow import ShadowCache, ShadowPanel
+from .window import WindowAudit, WindowedAuditor
+from .admission import SStarAdmission
+from .governor import DollarGovernor, SwapEvent
+
+__all__ = [
+    "MetricsRegistry", "ShadowCache", "ShadowPanel", "WindowAudit",
+    "WindowedAuditor", "SStarAdmission", "DollarGovernor", "SwapEvent",
+]

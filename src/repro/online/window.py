@@ -1,0 +1,116 @@
+"""Windowed exact audit: a live dollar-regret estimate over recent traffic.
+
+Keeps a ring buffer of the last `window` accesses (key, bytes, access-time
+miss cost, hit/miss) fed by the live cache's `AccessEvent` stream, and on
+demand brackets OPT-dollars on that window with the paper's offline
+reference: `exact_opt_uniform_sweep` when the window's sizes are uniform
+(one warm-started parametric SSP run answers the whole budget grid,
+DESIGN.md §5.2), the cost-FOO LP bracket otherwise. Observed dollars are
+the sum of the window's miss costs — exactly what the live cache billed
+for those accesses, at the prices in effect when they happened.
+
+The resulting regret series is the governor's "are we leaving dollars on
+the table RIGHT NOW" signal, published to the metrics registry.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import Trace, cost_foo, exact_opt_uniform_sweep
+from repro.egress.cache import AccessEvent
+
+__all__ = ["WindowAudit", "WindowedAuditor"]
+
+
+@dataclasses.dataclass
+class WindowAudit:
+    requests: int
+    observed_dollars: float      # what the live cache billed on this window
+    opt_dollars_lower: float     # exact (uniform) or cost-FOO lower bound
+    opt_dollars_upper: float
+    dollar_regret: float         # vs the lower bound (conservative)
+    uniform: bool
+    opt_by_budget: Optional[dict[int, float]] = None  # uniform + grid only
+
+    def summary(self) -> str:
+        return (f"[window audit] T={self.requests} "
+                f"$={self.observed_dollars:.6f} "
+                f"OPT in [{self.opt_dollars_lower:.6f}, "
+                f"{self.opt_dollars_upper:.6f}] "
+                f"regret={self.dollar_regret:.3f}")
+
+
+class WindowedAuditor:
+    """Ring buffer + on-demand exact bracket of OPT-dollars on the window."""
+
+    def __init__(self, capacity_bytes: float, window: int = 2048,
+                 budget_grid=None, metrics=None,
+                 series_name: str = "online.window_regret"):
+        self.capacity = float(capacity_bytes)
+        self.window = int(window)
+        self.budget_grid = (None if budget_grid is None
+                            else np.asarray(budget_grid, np.int64))
+        self.metrics = metrics
+        self.series_name = series_name
+        self._buf: collections.deque = collections.deque(maxlen=self.window)
+        self._seen = 0
+        self.audits = 0
+
+    def on_event(self, ev: AccessEvent) -> None:
+        self._buf.append((ev.key, ev.nbytes, ev.miss_cost, ev.hit))
+        self._seen += 1
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def audit(self) -> Optional[WindowAudit]:
+        """Bracket OPT-dollars on the buffered window; None if empty."""
+        if not self._buf:
+            return None
+        buf = list(self._buf)
+        uniq: dict[str, int] = {}
+        ids = np.empty(len(buf), np.int32)
+        sizes: list[float] = []
+        costs: list[float] = []
+        observed = 0.0
+        for t, (key, nbytes, mc, hit) in enumerate(buf):
+            i = uniq.get(key)
+            if i is None:
+                i = uniq[key] = len(sizes)
+                sizes.append(float(nbytes))
+                costs.append(float(mc))
+            else:
+                costs[i] = float(mc)   # latest access-time price wins
+            ids[t] = i
+            if not hit:
+                observed += mc
+        sizes_arr = np.asarray(sizes)
+        costs_arr = np.asarray(costs)
+        uniform = len(set(sizes_arr.tolist())) == 1
+        opt_by_budget = None
+        if uniform:
+            B = max(1, int(self.capacity // sizes_arr[0]))
+            grid = (np.unique(np.append(self.budget_grid, B))
+                    if self.budget_grid is not None
+                    else np.asarray([B], np.int64))
+            sweep = exact_opt_uniform_sweep(ids, costs_arr, grid)
+            opt_by_budget = {int(b): float(d)
+                             for b, d in zip(sweep.budgets, sweep.dollars)}
+            lower = upper = opt_by_budget[int(B)]
+        else:
+            tr = Trace(ids=ids, sizes=sizes_arr, name="window_audit")
+            r = cost_foo(tr, costs_arr, self.capacity)
+            lower, upper = r.lower, r.upper
+        # observed >= lower mathematically; clip float jitter at exactly-OPT
+        reg = max(0.0, (observed - lower) / max(lower, 1e-12))
+        self.audits += 1
+        if self.metrics is not None:
+            self.metrics.observe(self.series_name, reg, step=self._seen)
+        return WindowAudit(requests=len(buf), observed_dollars=observed,
+                           opt_dollars_lower=lower, opt_dollars_upper=upper,
+                           dollar_regret=reg, uniform=uniform,
+                           opt_by_budget=opt_by_budget)

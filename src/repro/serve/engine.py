@@ -23,6 +23,7 @@ import numpy as np
 from repro.egress.cache import EgressCache
 from repro.egress.store import ObjectStore
 from repro.models.registry import ModelApi
+from repro.online import DollarGovernor, MetricsRegistry, WindowedAuditor
 
 __all__ = ["ServeEngine", "Request"]
 
@@ -43,11 +44,24 @@ class ServeEngine:
     def __init__(self, model: ModelApi, params,
                  store: Optional[ObjectStore] = None,
                  prefix_cache_bytes: float = 1 << 24,
-                 policy: str = "gdsf"):
+                 policy: str = "gdsf", govern: bool = False,
+                 governor_window: int = 64, hysteresis: float = 0.05,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.store = store or ObjectStore("gcs_internet")
-        self.cache = EgressCache(self.store, prefix_cache_bytes, policy)
+        self.metrics = metrics or MetricsRegistry()
+        self.cache = EgressCache(self.store, prefix_cache_bytes, policy,
+                                 consumer="serve_prefix_cache",
+                                 metrics=self.metrics)
+        self.governor: Optional[DollarGovernor] = None
+        if govern:
+            auditor = WindowedAuditor(prefix_cache_bytes,
+                                      window=4 * governor_window,
+                                      metrics=self.metrics)
+            self.governor = DollarGovernor(
+                self.cache, window=governor_window, hysteresis=hysteresis,
+                auditor=auditor, metrics=self.metrics)
         self._decode = jax.jit(
             lambda p, t, c, i: model.decode_step(p, t, c, i))
 
@@ -93,10 +107,20 @@ class ServeEngine:
             gen = np.stack([np.asarray(t) for t in outs], 1)
             for i, r in enumerate(group):
                 r.output = gen[i][:r.max_new_tokens]
+        self.metrics.inc("serve.requests", len(requests))
         return requests
 
     def audit(self):
         return self.cache.audit()
+
+    def governance_snapshot(self) -> dict:
+        """Metrics + governor state, the JSON-exportable operational view."""
+        snap = dict(metrics=self.metrics.snapshot(),
+                    store=self.store.meter.snapshot(),
+                    consumers=self.store.consumer_snapshot())
+        if self.governor is not None:
+            snap["governor"] = self.governor.snapshot()
+        return snap
 
 
 def _grow(model: ModelApi, caches, max_len: int):

@@ -1,0 +1,319 @@
+"""Online dollar-governance subsystem: shadow panel, windowed audit,
+s*-aware admission, governor hot-swap, per-consumer billing attribution."""
+import numpy as np
+import pytest
+
+from repro.core.pricing import PRICE_VECTORS, PriceVector
+from repro.egress import EgressCache, ObjectStore
+from repro.online import (DollarGovernor, MetricsRegistry, SStarAdmission,
+                          ShadowCache, ShadowPanel, WindowedAuditor)
+from repro.online.scenario import (EGRESS_HEAVY, FEE_HEAVY,
+                                   regime_shift_scenario, run_fixed,
+                                   run_governed)
+
+ONLINE = ("lru", "lfu", "gds", "gdsf")
+
+
+def _uniform_store(price="s3_internet", n=32, size=4096):
+    store = ObjectStore(price)
+    for i in range(n):
+        store.put(f"o{i}", bytes(size))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_roundtrip(tmp_path):
+    m = MetricsRegistry()
+    m.inc("a")
+    m.inc("a", 2)
+    m.set_gauge("g", 1.5)
+    m.observe("s", 0.1, step=10)
+    m.observe("s", 0.2, step=20)
+    assert m.counter("a") == 3
+    assert m.latest("s") == pytest.approx(0.2)
+    snap = m.snapshot()
+    assert snap["gauges"]["g"] == 1.5
+    assert snap["series"]["s"] == [[10, 0.1], [20, 0.2]]
+    p = m.write_json(tmp_path / "metrics.json")
+    import json
+    assert json.loads(p.read_text())["counters"]["a"] == 3
+
+
+# ---------------------------------------------------------------------------
+# per-consumer billing attribution (audit satellite)
+# ---------------------------------------------------------------------------
+
+def test_audit_excludes_other_consumers():
+    store = _uniform_store()
+    cache = EgressCache(store, 8 * 4096, "lru", consumer="mine")
+    for i in range(16):
+        cache.get(f"o{i}")
+    # another consumer hammers the store directly: must NOT pollute audit
+    for _ in range(50):
+        store.get("o0", consumer="other")
+    rep = cache.audit()
+    assert rep.observed_dollars == pytest.approx(cache.meter.dollars)
+    assert store.meter.dollars > rep.observed_dollars
+    assert store.meter_for("other").gets == 50
+
+
+def test_consumer_dollars_sum_to_store_total():
+    store = _uniform_store()
+    a = EgressCache(store, 4 * 4096, "lru", consumer="a")
+    b = EgressCache(store, 4 * 4096, "gdsf", consumer="b")
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, 32, 300):
+        (a if i % 2 else b).get(f"o{i}")
+    per = store.consumer_snapshot()
+    assert set(per) == {"a", "b"}
+    assert sum(m["dollars"] for m in per.values()) == \
+        pytest.approx(store.meter.dollars)
+
+
+def test_audit_budget_grid_one_sweep():
+    store = _uniform_store()
+    cache = EgressCache(store, 4 * 4096, "lru")
+    rng = np.random.default_rng(1)
+    for i in rng.zipf(1.2, 400) % 32:
+        cache.get(f"o{i}")
+    rep = cache.audit(budget_grid=[1, 2, 8, 16])
+    assert rep.opt_by_budget is not None
+    assert set(rep.opt_by_budget) >= {1, 2, 8, 16}
+    # exact OPT-dollars are non-increasing in budget
+    ds = [rep.opt_by_budget[b] for b in sorted(rep.opt_by_budget)]
+    assert all(x >= y - 1e-12 for x, y in zip(ds, ds[1:]))
+    # the bracket refers to the cache's own budget (4 pages), also in the grid
+    assert rep.opt_dollars_lower == pytest.approx(rep.opt_by_budget[4])
+
+
+def test_repricing_accrues_not_rewrites():
+    store = ObjectStore("s3_internet")
+    store.put("k", bytes(1000))
+    store.get("k")
+    d1 = store.meter.dollars
+    pv = PRICE_VECTORS["s3_internet"]
+    assert d1 == pytest.approx(float(pv.miss_cost(1000)))
+    store.set_price("gcs_internet")
+    store.get("k")
+    pv2 = PRICE_VECTORS["gcs_internet"]
+    assert store.meter.dollars == pytest.approx(
+        d1 + float(pv2.miss_cost(1000)))
+
+
+# ---------------------------------------------------------------------------
+# shadow panel
+# ---------------------------------------------------------------------------
+
+def test_shadow_panel_bills_zero_egress():
+    store = _uniform_store()
+    cache = EgressCache(store, 8 * 4096, "lru", consumer="live")
+    panel = ShadowPanel(cache.capacity, ONLINE)
+    cache.add_listener(panel.on_event)
+    rng = np.random.default_rng(2)
+    for i in rng.integers(0, 32, 500):
+        cache.get(f"o{i}")
+    # every billed dollar is attributed to the live cache; shadows are free
+    assert set(store.consumer_snapshot()) == {"live"}
+    assert store.meter.dollars == pytest.approx(cache.meter.dollars)
+    # yet the panel DID account counterfactual dollars
+    assert all(d > 0 for d in panel.dollars().values())
+
+
+def test_shadow_matches_live_policy_exactly():
+    """A shadow running the live cache's own policy must reproduce its bill
+    step-for-step: same priorities, same tiebreaks, same dollars."""
+    for policy in ONLINE:
+        store = _uniform_store(n=24, size=2048)
+        cache = EgressCache(store, 5 * 2048, policy, consumer=f"live_{policy}")
+        shadow = ShadowCache(policy, cache.capacity)
+        cache.add_listener(
+            lambda ev, sh=shadow: sh.access(ev.key, ev.nbytes, ev.miss_cost))
+        rng = np.random.default_rng(3)
+        for i in rng.zipf(1.3, 600) % 24:
+            cache.get(f"o{i}")
+        assert shadow.hits == cache.hits, policy
+        assert shadow.misses == cache.misses, policy
+        assert shadow.dollars == pytest.approx(cache.meter.dollars), policy
+
+
+# ---------------------------------------------------------------------------
+# windowed audit
+# ---------------------------------------------------------------------------
+
+def test_window_ring_buffer_caps_length():
+    store = _uniform_store()
+    cache = EgressCache(store, 8 * 4096, "lru")
+    aud = WindowedAuditor(cache.capacity, window=64)
+    cache.add_listener(aud.on_event)
+    for i in range(200):
+        cache.get(f"o{i % 32}")
+    assert len(aud) == 64
+
+
+def test_window_audit_uniform_exact_sweep():
+    store = _uniform_store()
+    cache = EgressCache(store, 4 * 4096, "lru")
+    m = MetricsRegistry()
+    aud = WindowedAuditor(cache.capacity, window=256,
+                          budget_grid=[2, 4, 8], metrics=m)
+    cache.add_listener(aud.on_event)
+    rng = np.random.default_rng(4)
+    for i in rng.zipf(1.2, 400) % 32:
+        cache.get(f"o{i}")
+    rep = aud.audit()
+    assert rep.uniform
+    assert rep.opt_dollars_lower == rep.opt_dollars_upper  # exact, not bracket
+    assert rep.observed_dollars >= rep.opt_dollars_lower - 1e-12
+    assert rep.dollar_regret >= 0
+    ds = [rep.opt_by_budget[b] for b in sorted(rep.opt_by_budget)]
+    assert all(x >= y - 1e-12 for x, y in zip(ds, ds[1:]))
+    assert m.latest("online.window_regret") == pytest.approx(rep.dollar_regret)
+
+
+def test_window_audit_variable_sizes_bracket():
+    store = ObjectStore("gcs_internet")
+    rng = np.random.default_rng(5)
+    sizes = rng.integers(500, 50_000, 16)
+    for i, s in enumerate(sizes):
+        store.put(f"o{i}", bytes(int(s)))
+    cache = EgressCache(store, 60_000, "gdsf")
+    aud = WindowedAuditor(cache.capacity, window=256)
+    cache.add_listener(aud.on_event)
+    for i in rng.integers(0, 16, 250):
+        cache.get(f"o{i}")
+    rep = aud.audit()
+    assert not rep.uniform
+    assert rep.opt_dollars_lower <= rep.opt_dollars_upper + 1e-12
+    assert rep.observed_dollars >= rep.opt_dollars_lower - 1e-12
+
+
+def test_empty_window_audit_is_none():
+    aud = WindowedAuditor(1000, window=16)
+    assert aud.audit() is None
+
+
+# ---------------------------------------------------------------------------
+# s*-aware admission
+# ---------------------------------------------------------------------------
+
+def test_sstar_admission_rules():
+    pv = PriceVector("t", get_fee=1e-6, egress_per_byte=1e-9)  # s* = 1000 B
+    adm = SStarAdmission(pv, capacity_bytes=100_000,
+                         large_object_frac=0.5)
+    assert adm.admit("a", 500, 1)          # below s*: always keep
+    assert not adm.admit("b", 60_000, 5)   # > 50% of capacity: never
+    assert not adm.admit("c", 5_000, 1)    # egress-dominated, first touch
+    assert adm.admit("c", 5_000, 2)        # ... admitted on reuse
+    assert adm.admitted == 2 and adm.bypassed == 2
+
+
+def test_admission_plugged_into_cache_bypasses():
+    store = ObjectStore(PriceVector("t", get_fee=1e-6, egress_per_byte=1e-9))
+    store.put("small", bytes(500))
+    store.put("mid", bytes(5_000))
+    adm = SStarAdmission(store, capacity_bytes=100_000)
+    cache = EgressCache(store, 100_000, "lru", admission=adm)
+    cache.get("small")
+    assert cache.get("small")  # resident: admitted below s*
+    assert store.meter.gets == 1
+    cache.get("mid")           # first touch: bypassed (fetch-through)
+    assert cache.bypasses == 1
+    cache.get("mid")           # second touch: missed again, now admitted
+    assert store.meter.gets == 3
+    cache.get("mid")
+    assert store.meter.gets == 3  # resident now
+
+
+def test_admission_tracks_price_flip():
+    store = ObjectStore(FEE_HEAVY)          # s* = 10 MB: everything admitted
+    store.put("obj", bytes(50_000))
+    adm = SStarAdmission(store, capacity_bytes=10_000_000)
+    assert adm.admit("obj", 50_000, 1)
+    store.set_price(EGRESS_HEAVY)           # s* = 10 B: now on probation
+    assert not adm.admit("obj2", 50_000, 1)
+
+
+# ---------------------------------------------------------------------------
+# governor + regime shift (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_policy_hot_swap_preserves_contents_and_bill():
+    store = _uniform_store()
+    cache = EgressCache(store, 8 * 4096, "lru")
+    for i in range(8):
+        cache.get(f"o{i}")
+    resident = dict(cache._data)
+    bill = cache.meter.dollars
+    cache.set_policy("gdsf")
+    assert cache._data == resident
+    assert cache.used == sum(len(v) for v in resident.values())
+    assert cache.meter.dollars == bill          # the swap itself bills $0
+    for i in range(8):
+        cache.get(f"o{i}")                      # all hits: still unbilled
+    assert cache.meter.dollars == bill
+    assert cache.policy_swaps == 1
+
+
+def test_governor_swaps_toward_cheaper_shadow():
+    """LFU start on a drifting working set: the governor must leave LFU."""
+    store = ObjectStore(FEE_HEAVY)
+    for i in range(200):
+        store.put(f"o{i}", bytes(1024))
+    cache = EgressCache(store, 20 * 1024, "lfu", consumer="live")
+    gov = DollarGovernor(cache, window=100, hysteresis=0.05)
+    rng = np.random.default_rng(6)
+    base = 0
+    for step in range(1200):
+        if step and step % 150 == 0:
+            base += 10                      # working set drifts: LFU stales
+        cache.get(f"o{base + int(rng.integers(12))}")
+    assert cache.policy != "lfu"
+    assert len(gov.swaps) >= 1
+    assert gov.swaps[0].old_policy == "lfu"
+
+
+def test_regime_shift_governor_within_10pct_of_best_fixed():
+    """The ISSUE's acceptance criterion: price vector flipped across s*
+    mid-trace; governed realized dollars within 10% of the best fixed
+    policy in hindsight; shadow panel bills $0 of extra egress."""
+    sc = regime_shift_scenario(n_phase=3000, seed=0)
+    fixed = {p: run_fixed(sc, p)["dollars"] for p in ONLINE}
+    best_policy = min(fixed, key=lambda p: fixed[p])
+    m = MetricsRegistry()
+    gov_res, gov = run_governed(sc, metrics=m)
+    assert gov_res["dollars"] <= 1.10 * fixed[best_policy], \
+        (gov_res, fixed)
+    # the governor actually adapted (regime shift = at least one swap)
+    assert len(gov_res["swaps"]) >= 1
+    # shadow panel billed $0 extra egress: every store dollar is attributed
+    # to the governed cache's own consumer meter, and to nothing else
+    store_dollars = gov.cache.store.meter.dollars
+    per_consumer = gov.cache.store.consumer_snapshot()
+    assert set(per_consumer) == {"governed"}
+    assert per_consumer["governed"]["dollars"] == pytest.approx(store_dollars)
+    # metrics saw the swaps and the per-policy window series
+    assert m.counter("governor.swaps") == len(gov_res["swaps"])
+    assert any(k.startswith("governor.window_dollars.") for k in m.series)
+
+
+def test_regime_shift_phase_winners_flip():
+    """The scenario really is a regime shift: the per-phase winner changes
+    across the price flip (recency wins fee-dominated, cost-awareness wins
+    egress-dominated)."""
+    sc = regime_shift_scenario(n_phase=3000, seed=0)
+    phase = {}
+    for p in ("lru", "gdsf"):
+        store = sc.make_store()
+        cache = EgressCache(store, sc.capacity_bytes, p, consumer="x")
+        ph1 = None
+        for t, key in enumerate(sc.keys):
+            if t == sc.flip_at:
+                store.set_price(sc.price_b)
+                ph1 = cache.meter.dollars
+            cache.get(key)
+        phase[p] = (ph1, cache.meter.dollars - ph1)
+    assert phase["lru"][0] < phase["gdsf"][0]    # fee phase: LRU cheaper
+    assert phase["gdsf"][1] < phase["lru"][1]    # egress phase: GDSF cheaper
