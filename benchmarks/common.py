@@ -2,11 +2,15 @@
 
 Every `emit` row is also collected in-process so `run.py` can write a
 machine-readable `BENCH_<name>.json` next to the CSV stream — the artifact
-the perf trajectory is tracked with across PRs.
+the perf trajectory is tracked with across PRs. `timed` returns a `Timing`
+(a float carrying the per-repeat samples), so rows emitted from it record
+min/mean/std and the repeat count — one averaged scalar is not
+statistically interpretable across PRs.
 """
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import time
 
@@ -16,19 +20,57 @@ _RECORDS: list[dict] = []
 OUT_DIR = pathlib.Path(__file__).resolve().parent / "out"
 
 
+class Timing(float):
+    """Mean seconds-per-call that also carries the per-repeat samples, so
+    it drops into existing arithmetic (ratios, req/s) unchanged while
+    `emit` can record the spread."""
+
+    times: tuple[float, ...]
+
+    def __new__(cls, times):
+        times = tuple(float(t) for t in times)
+        self = super().__new__(cls, sum(times) / len(times))
+        self.times = times
+        return self
+
+    @property
+    def min(self) -> float:
+        return min(self.times)
+
+    @property
+    def mean(self) -> float:
+        return float(self)
+
+    @property
+    def std(self) -> float:
+        m = self.mean
+        return math.sqrt(sum((t - m) ** 2 for t in self.times)
+                         / len(self.times))
+
+    def stats(self) -> dict:
+        return dict(repeats=len(self.times), min_us=self.min * 1e6,
+                    mean_us=self.mean * 1e6, std_us=self.std * 1e6,
+                    samples_us=[t * 1e6 for t in self.times])
+
+
 def timed(fn, *args, repeats: int = 3, **kwargs):
-    """Returns (result, seconds_per_call)."""
+    """Returns (result, Timing) — mean seconds-per-call + per-repeat
+    samples (each repeat timed individually)."""
     fn(*args, **kwargs)  # warm
-    t0 = time.perf_counter()
     out = None
+    times = []
     for _ in range(repeats):
+        t0 = time.perf_counter()
         out = fn(*args, **kwargs)
-    dt = (time.perf_counter() - t0) / repeats
-    return out, dt
+        times.append(time.perf_counter() - t0)
+    return out, Timing(times)
 
 
 def emit(name: str, seconds: float, derived: str):
-    _RECORDS.append(dict(name=name, us_per_call=seconds * 1e6, derived=derived))
+    row = dict(name=name, us_per_call=seconds * 1e6, derived=derived)
+    if isinstance(seconds, Timing):
+        row["timing"] = seconds.stats()
+    _RECORDS.append(row)
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 

@@ -82,6 +82,7 @@ class OptResult:
     hits: int                 # number of retained gaps (incl. free ones)
     selected: list[Interval]  # retained gaps (excl. trivially-free ones)
     free_hits: int            # gaps with no interior instant (always kept)
+    profile: dict = dataclasses.field(default_factory=dict)  # solver counters
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +110,7 @@ class SweepResult:
     total_no_cache: float      # sum of all c_{o(t)}
     free_hits: int             # gaps with no interior instant (always kept)
     unit_path_costs: np.ndarray  # per-unit SSP path costs (non-decreasing)
+    profile: dict = dataclasses.field(default_factory=dict)  # solver counters
 
 
 class _ParametricSSP:
@@ -130,6 +132,10 @@ class _ParametricSSP:
 
     def __init__(self, T: int, paid_t: np.ndarray, paid_u: np.ndarray,
                  paid_save: np.ndarray, k_max: int):
+        # profiling counters (DESIGN.md §9): surfaced via OptResult/
+        # SweepResult `.profile` so operators can see where solve time went
+        self.dijkstra_calls = 0
+        self.augmentations = 0
         self.n = n = T
         self.s, self.t = 0, T - 1
         self.m = m = len(paid_t)
@@ -209,6 +215,7 @@ class _ParametricSSP:
                        out=data)
             np.maximum(data, 0.0, out=data)  # clip fp jitter in reduced costs
             g = csr_matrix((data, self.indices, self.indptr), shape=(n, n))
+            self.dijkstra_calls += 1
             dist, pred = dijkstra(g, directed=True, indices=s,
                                   return_predecessors=True)
             dt = float(dist[t])
@@ -242,7 +249,18 @@ class _ParametricSSP:
             unit_costs.append(path_cost)
             unit_dsel.append(dsel)
             remaining -= 1
+        self.augmentations += len(unit_costs)
         return np.asarray(unit_costs), np.asarray(unit_dsel, dtype=np.int64)
+
+    def profile(self, budgets_answered: int = 1) -> dict:
+        """Solver counters: how the exact answer was produced. A sweep
+        answers `budgets_answered` budgets from this ONE augmentation
+        sequence — that ratio is the warm-start reuse."""
+        return dict(dijkstra_calls=self.dijkstra_calls,
+                    augmentations=self.augmentations,
+                    nodes=int(self.n), paid_intervals=int(self.m),
+                    budgets_answered=int(budgets_answered),
+                    warm_start_reuse=float(budgets_answered))
 
     def saturated_intervals(self) -> np.ndarray:
         """Indices j of paid intervals whose unit arc is saturated."""
@@ -295,7 +313,7 @@ def exact_opt_uniform(ids: np.ndarray, costs: np.ndarray, B: int,
                              float(paid_save[j]), 1.0) for j in sel_idx]
     dollars = total - savings
     return OptResult(dollars, savings, total, n_free + len(sel_idx),
-                     selected, n_free)
+                     selected, n_free, profile=ssp.profile())
 
 
 def exact_opt_uniform_sweep(ids: np.ndarray, costs: np.ndarray,
@@ -322,9 +340,13 @@ def exact_opt_uniform_sweep(ids: np.ndarray, costs: np.ndarray,
     if T == 0 or k_max < 1 or len(paid_t) == 0:
         unit_costs = np.zeros(0)
         unit_dsel = np.zeros(0, np.int64)
+        profile = dict(dijkstra_calls=0, augmentations=0, nodes=int(T),
+                       paid_intervals=int(len(paid_t)),
+                       budgets_answered=int(K), warm_start_reuse=float(K))
     else:
         ssp = _ParametricSSP(T, paid_t, paid_u, paid_save, k_max)
         unit_costs, unit_dsel = ssp.run(k_max)
+        profile = ssp.profile(budgets_answered=K)
     cum_save = np.concatenate([[0.0], np.cumsum(-unit_costs)])
     cum_sel = np.concatenate([[0], np.cumsum(unit_dsel)])
     ks = np.clip(budgets - 1, 0, len(unit_costs))
@@ -333,7 +355,8 @@ def exact_opt_uniform_sweep(ids: np.ndarray, costs: np.ndarray,
     hits = np.where(alive, cum_sel[ks] + n_free, 0).astype(np.int64)
     return SweepResult(budgets=budgets, dollars=total - savings,
                        savings=savings, hits=hits, total_no_cache=total,
-                       free_hits=n_free, unit_path_costs=unit_costs)
+                       free_hits=n_free, unit_path_costs=unit_costs,
+                       profile=profile)
 
 
 # ---------------------------------------------------------------------------

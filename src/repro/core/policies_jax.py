@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections.abc import Sequence
 
 import jax
@@ -232,7 +233,8 @@ def _sweep_grid_jit(donate: bool):
 def sweep_jax(policy, ids: np.ndarray, cost_matrix: np.ndarray,
               budgets: np.ndarray, num_objects: int | None = None,
               sizes: np.ndarray | None = None,
-              use_pallas: bool | None = None) -> np.ndarray:
+              use_pallas: bool | None = None,
+              profile: dict | None = None) -> np.ndarray:
     """Batched replay of a (policy x price-vector x budget) grid on device.
 
     policy:      one policy name -> dollars of shape (P, K);
@@ -241,6 +243,10 @@ def sweep_jax(policy, ids: np.ndarray, cost_matrix: np.ndarray,
                  policies replayed inside the SAME compiled scan program.
     cost_matrix: (P, N) per-object costs for P price vectors.
     budgets:     (K,) page budgets.
+    profile:     pass a dict to get compile time separated from execute
+                 time (DESIGN.md §9): filled with `compile_s` (trace +
+                 lower + XLA compile, ~0 when the executable is already
+                 cached) and `execute_s` (device run, block_until_ready).
     """
     single = isinstance(policy, str)
     if single:
@@ -256,9 +262,19 @@ def sweep_jax(policy, ids: np.ndarray, cost_matrix: np.ndarray,
     nxt = jnp.asarray(next_use_indices(ids).astype(np.int32))
     s = jnp.ones(n, jnp.float32) if sizes is None else jnp.asarray(sizes, jnp.float32)
     fn = _sweep_grid_jit(jax.default_backend() != "cpu")
-    out = fn(jnp.asarray(stack), jnp.asarray(ids), nxt,
-             jnp.asarray(cost_matrix, dtype=jnp.float32), s,
-             jnp.asarray(budgets, dtype=jnp.int32), n,
-             _resolve_use_pallas(use_pallas))
+    args = (jnp.asarray(stack), jnp.asarray(ids), nxt,
+            jnp.asarray(cost_matrix, dtype=jnp.float32), s,
+            jnp.asarray(budgets, dtype=jnp.int32))
+    up = _resolve_use_pallas(use_pallas)
+    if profile is None:
+        out = fn(*args, n, up)
+    else:
+        t0 = time.perf_counter()
+        compiled = fn.lower(*args, n, up).compile()
+        t1 = time.perf_counter()
+        out = jax.block_until_ready(compiled(*args))
+        t2 = time.perf_counter()
+        profile.update(compile_s=t1 - t0, execute_s=t2 - t1,
+                       cells=int(out.size))
     out = np.asarray(out)
     return out[0] if single else out

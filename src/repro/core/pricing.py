@@ -38,6 +38,14 @@ class PriceVector:
         s = np.asarray(size_bytes, dtype=np.float64)
         return self.get_fee + s * self.egress_per_byte + self.latency_penalty
 
+    def miss_cost_scalar(self, size_bytes: float) -> float:
+        """Scalar fast path for per-access hot loops (EgressCache, tracer
+        spans): identical IEEE-754 operation order to `miss_cost`, so the
+        result is bit-equal to `float(miss_cost(s))` — billing-faithful
+        without the ~2us numpy round-trip."""
+        return (self.get_fee + float(size_bytes) * self.egress_per_byte
+                + self.latency_penalty)
+
     @property
     def crossover_bytes(self) -> float:
         """s* = f / e — object size at which GET fee equals egress cost."""

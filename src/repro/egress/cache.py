@@ -12,6 +12,14 @@ registered listeners (the shadow panel / windowed audit / metrics of
 `set_policy` hot-swaps the replacement policy in place, preserving cache
 contents so a swap never re-bills; an optional admission controller can
 veto insertions (fetch-through, the s*-aware bypass of eq. 3).
+
+Observability surface (DESIGN.md §9), all duck-typed so this layer never
+imports `repro.obs`: `tracer` gets one `cache.get` span per access (the
+billed `store.get` span nests inside it on a miss); `events` gets one
+decision event per hit/miss/admit/reject/evict/policy_swap with its
+dollar delta; `metrics.observe_hist` (when present) gets log-bucketed
+object-size (centered on s*) and per-GET-dollar histograms. All three
+default to None and cost one branch when absent.
 """
 from __future__ import annotations
 
@@ -90,7 +98,7 @@ class EgressCache:
     def __init__(self, store: ObjectStore, capacity_bytes: float,
                  policy: str = "gdsf", consumer: Optional[str] = None,
                  admission: Optional[AdmissionController] = None,
-                 metrics=None):
+                 metrics=None, tracer=None, events=None):
         assert policy in ONLINE_POLICIES, policy
         self.store = store
         self.capacity = float(capacity_bytes)
@@ -99,6 +107,20 @@ class EgressCache:
         self.meter = store.meter_for(self.consumer)
         self.admission = admission
         self.metrics = metrics           # duck-typed: .inc(name, value=1)
+        self.tracer = tracer             # duck-typed: .span(name, cat, **a)
+        self.events = events             # duck-typed: .record(kind, ...)
+        # precomputed publishing surface (hot path stays branch-cheap)
+        self._observe_hist = getattr(metrics, "observe_hist", None)
+        self._m_hits = f"egress.{self.consumer}.hits"
+        self._m_misses = f"egress.{self.consumer}.misses"
+        self._m_bytes = f"egress.{self.consumer}.bytes_fetched"
+        self._m_size_hist = f"egress.{self.consumer}.object_bytes"
+        self._m_dollar_hist = f"egress.{self.consumer}.get_dollars"
+        # size buckets centered on s* at attach time (octaves of 2; the s*
+        # boundary itself is a bucket bound, so counts at/below it are the
+        # fee-dominated accesses)
+        sstar = store.price.crossover_bytes
+        self._size_bounds = [sstar * 2.0 ** k for k in range(-8, 9)]
         self.used = 0.0
         self._data: dict[str, bytes] = {}
         self._prio: dict[str, tuple[float, int]] = {}
@@ -119,7 +141,9 @@ class EgressCache:
         self._listeners.append(fn)
 
     def _miss_cost(self, nbytes: int) -> float:
-        return float(self.store.price.miss_cost(nbytes))
+        # scalar fast path; reads store.price on every call so a mid-stream
+        # `set_price` reprices immediately (bit-equal to miss_cost(nbytes))
+        return self.store.price.miss_cost_scalar(nbytes)
 
     def _priority(self, key: str, nbytes: int) -> float:
         dens = self._miss_cost(nbytes) / max(nbytes, 1)
@@ -146,6 +170,11 @@ class EgressCache:
             self.used -= len(data)
             if self.policy in ("gds", "gdsf"):
                 self._inflation = pr
+            if self.events is not None:
+                # bills nothing now; at stake = the re-fetch cost if touched
+                self.events.record("evict", key, len(data), 0.0,
+                                   self._miss_cost(len(data)), self._clock,
+                                   self.policy)
 
     # ------------------------------------------------------------------
     def set_policy(self, policy: str) -> None:
@@ -168,9 +197,26 @@ class EgressCache:
         self.policy_swaps += 1
         if self.metrics is not None:
             self.metrics.inc(f"egress.{self.consumer}.policy_swaps")
+        if self.events is not None:
+            self.events.record("policy_swap", "", 0, 0.0, 0.0, self._clock,
+                               policy)
 
     # ------------------------------------------------------------------
     def get(self, key: str) -> bytes:
+        t = self.tracer
+        if not t:
+            return self._lookup(key)
+        sp = t.begin("cache.get", "cache")
+        try:
+            h0 = self.hits
+            data = self._lookup(key)
+            sp.attrs = {"key": key, "bytes": len(data),
+                        "hit": self.hits > h0, "policy": self.policy}
+            return data
+        finally:
+            t.end(sp)
+
+    def _lookup(self, key: str) -> bytes:
         self._clock += 1
         self._trace_keys.append(key)
         self._freq[key] = self._freq.get(key, 0) + 1
@@ -182,31 +228,48 @@ class EgressCache:
             return data
         self.misses += 1
         data = self.store.get(key, consumer=self.consumer)   # billed fetch
-        admit = len(data) <= self.capacity
+        nbytes = len(data)
+        admit = nbytes <= self.capacity
         if admit and self.admission is not None:
-            admit = self.admission.admit(key, len(data), self._freq[key])
+            admit = self.admission.admit(key, nbytes, self._freq[key])
             if not admit:
                 self.bypasses += 1
         if admit:
-            self._evict_until_fits(len(data))
+            self._evict_until_fits(nbytes)
             self._data[key] = data
-            self.used += len(data)
-            self._touch(key, len(data))
-        self._emit(key, len(data), hit=False)
+            self.used += nbytes
+            self._touch(key, nbytes)
+        self._emit(key, nbytes, hit=False)
+        if self.events is not None:
+            self.events.record("admit" if admit else "reject", key, nbytes,
+                               0.0, self._miss_cost(nbytes), self._clock,
+                               self.policy)
         return data
 
     def _emit(self, key: str, nbytes: int, hit: bool) -> None:
+        mc = None
         if self.metrics is not None:
-            self.metrics.inc(f"egress.{self.consumer}."
-                             + ("hits" if hit else "misses"))
+            self.metrics.inc(self._m_hits if hit else self._m_misses)
             if not hit:
-                self.metrics.inc(f"egress.{self.consumer}.bytes_fetched",
-                                 nbytes)
-        if self._listeners:
-            ev = AccessEvent(key, nbytes, hit, self._miss_cost(nbytes),
-                             self.policy, self._clock)
-            for fn in self._listeners:
-                fn(ev)
+                self.metrics.inc(self._m_bytes, nbytes)
+            if self._observe_hist is not None:
+                self._observe_hist(self._m_size_hist, nbytes,
+                                   bounds=self._size_bounds)
+                if not hit:
+                    mc = self._miss_cost(nbytes)
+                    self._observe_hist(self._m_dollar_hist, mc)
+        if self.events is not None or self._listeners:
+            if mc is None:
+                mc = self._miss_cost(nbytes)
+            if self.events is not None:
+                self.events.record("hit" if hit else "miss", key, nbytes,
+                                   0.0 if hit else mc, mc, self._clock,
+                                   self.policy)
+            if self._listeners:
+                ev = AccessEvent(key, nbytes, hit, mc, self.policy,
+                                 self._clock)
+                for fn in self._listeners:
+                    fn(ev)
 
     @property
     def hit_rate(self) -> float:

@@ -11,6 +11,12 @@ so a cache's audit can score exactly the dollars *it* caused, not traffic
 from other consumers sharing the store (DESIGN.md §8). Dollars accrue at
 the price in effect when each GET happens, so `set_price` (a mid-stream
 cloud repricing) never rewrites history.
+
+Observability (DESIGN.md §9): an attached tracer (duck-typed — this layer
+never imports `repro.obs`) gets one `store.get` span per billed GET,
+carrying the exact dollars the meter accrued for it, the byte count, and
+the size-vs-s* regime tag; summing span dollars per consumer reproduces
+that consumer's meter total.
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ class BillingMeter:
     def record_get(self, nbytes: float):
         self.gets += 1
         self.bytes_egressed += nbytes
-        self.dollars += float(self.price.miss_cost(nbytes))
+        self.dollars += self.price.miss_cost_scalar(nbytes)
 
     def snapshot(self) -> dict:
         return dict(gets=self.gets, puts=self.puts,
@@ -49,14 +55,20 @@ class ObjectStore:
     (`register_lazy`) so multi-GB synthetic datasets don't occupy RAM.
     """
 
-    def __init__(self, price: PriceVector | str = "s3_internet"):
+    def __init__(self, price: PriceVector | str = "s3_internet",
+                 tracer=None):
         if isinstance(price, str):
             price = PRICE_VECTORS[price]
         self.meter = BillingMeter(price)
+        self.tracer = tracer    # duck-typed: .span(name, cat=..., **attrs)
         self._consumer_meters: dict[str, BillingMeter] = {}
         self._data: dict[str, bytes] = {}
         self._lazy: dict[str, tuple[int, Callable[[], bytes]]] = {}
         self._lock = threading.Lock()
+
+    def set_tracer(self, tracer) -> None:
+        """Attach/detach the span tracer (None or falsy disables)."""
+        self.tracer = tracer
 
     # ---- pricing ----------------------------------------------------------
     @property
@@ -100,6 +112,23 @@ class ObjectStore:
 
     # ---- consumer side (billed) ---------------------------------------------
     def get(self, key: str, consumer: Optional[str] = None) -> bytes:
+        t = self.tracer
+        if not t:
+            return self._get_billed(key, consumer)
+        with t.span("store.get", cat="store", key=key,
+                    consumer=consumer or "") as sp:
+            data = self._get_billed(key, consumer)
+            nbytes = len(data)
+            price = self.meter.price
+            # the exact float the meter accrued for this GET
+            sp.set(bytes=nbytes,
+                   dollars=price.miss_cost_scalar(nbytes),
+                   regime=("fee_dominated"
+                           if nbytes <= price.crossover_bytes
+                           else "egress_dominated"))
+            return data
+
+    def _get_billed(self, key: str, consumer: Optional[str]) -> bytes:
         with self._lock:
             if key in self._data:
                 data = self._data[key]

@@ -1,5 +1,5 @@
 # Online dollar-governance over the egress stack (DESIGN.md §8):
-#   metrics   — process-local registry all layers publish through (JSON export)
+#   metrics   — back-compat shim; the registry lives in repro.obs.metrics (§9)
 #   shadow    — metadata-only shadow panel: counterfactual $ per policy, $0 egress
 #   window    — ring-buffered exact audit: live OPT-dollar bracket + regret
 #   admission — s*-aware bypass/keep rule (eq. 3 as an admission controller)

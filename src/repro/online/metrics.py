@@ -1,74 +1,11 @@
-"""Metrics registry for the online governance layer (DESIGN.md §8).
+"""Back-compat shim: `MetricsRegistry` moved to `repro.obs.metrics`.
 
-A single process-local registry of counters, gauges, and time series that
-`ObjectStore`, `EgressCache`, `ServeEngine`, and the dollar-governor all
-publish through. Publishers hold it duck-typed (anything with `.inc` /
-`.set_gauge` / `.observe`), so the egress layer never imports this module
-— `repro.online` sits strictly above `repro.egress`.
-
-Export is JSON (`to_json` / `write_json`): the artifact consumed by
-`examples/policy_audit.py` and `benchmarks/bench_governor.py`.
+The registry was promoted into the observability layer (DESIGN.md §9)
+when it grew histograms and Prometheus exposition; import it from
+`repro.obs` in new code. This module keeps `repro.online.metrics` (and
+`from repro.online import MetricsRegistry`) working unchanged.
 """
-from __future__ import annotations
+from repro.obs.metrics import (Histogram, MetricsRegistry,  # noqa: F401
+                               log_bounds, sstar_bounds)
 
-import json
-import pathlib
-import threading
-from typing import Optional
-
-__all__ = ["MetricsRegistry"]
-
-
-class MetricsRegistry:
-    """Counters (monotone), gauges (last value), series ((step, value) lists)."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.counters: dict[str, float] = {}
-        self.gauges: dict[str, float] = {}
-        self.series: dict[str, list[tuple[int, float]]] = {}
-        self._step = 0
-
-    # ---- publishing -------------------------------------------------------
-    def inc(self, name: str, value: float = 1.0) -> None:
-        with self._lock:
-            self.counters[name] = self.counters.get(name, 0.0) + value
-
-    def set_gauge(self, name: str, value: float) -> None:
-        with self._lock:
-            self.gauges[name] = float(value)
-
-    def observe(self, name: str, value: float,
-                step: Optional[int] = None) -> None:
-        """Append to a time series; `step` defaults to an internal tick."""
-        with self._lock:
-            if step is None:
-                self._step += 1
-                step = self._step
-            self.series.setdefault(name, []).append((int(step), float(value)))
-
-    # ---- reading / export -------------------------------------------------
-    def counter(self, name: str) -> float:
-        return self.counters.get(name, 0.0)
-
-    def latest(self, name: str) -> Optional[float]:
-        s = self.series.get(name)
-        return s[-1][1] if s else None
-
-    def snapshot(self) -> dict:
-        with self._lock:
-            return dict(
-                counters=dict(self.counters),
-                gauges=dict(self.gauges),
-                series={k: [list(p) for p in v]
-                        for k, v in self.series.items()},
-            )
-
-    def to_json(self, indent: int = 2) -> str:
-        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
-
-    def write_json(self, path) -> pathlib.Path:
-        path = pathlib.Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(self.to_json() + "\n")
-        return path
+__all__ = ["MetricsRegistry", "Histogram", "log_bounds", "sstar_bounds"]

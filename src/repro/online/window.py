@@ -101,6 +101,15 @@ class WindowedAuditor:
             opt_by_budget = {int(b): float(d)
                              for b, d in zip(sweep.budgets, sweep.dollars)}
             lower = upper = opt_by_budget[int(B)]
+            if self.metrics is not None and sweep.profile:
+                # solver profiling (DESIGN.md §9): where audit time goes
+                self.metrics.inc("solver.sweep.runs")
+                self.metrics.inc("solver.sweep.dijkstra_calls",
+                                 sweep.profile["dijkstra_calls"])
+                self.metrics.inc("solver.sweep.augmentations",
+                                 sweep.profile["augmentations"])
+                self.metrics.inc("solver.sweep.budgets_answered",
+                                 sweep.profile["budgets_answered"])
         else:
             tr = Trace(ids=ids, sizes=sizes_arr, name="window_audit")
             r = cost_foo(tr, costs_arr, self.capacity)
@@ -110,6 +119,10 @@ class WindowedAuditor:
         self.audits += 1
         if self.metrics is not None:
             self.metrics.observe(self.series_name, reg, step=self._seen)
+            oh = getattr(self.metrics, "observe_hist", None)
+            if oh is not None:   # windowed-regret histogram (DESIGN.md §9)
+                oh(self.series_name + "_hist", reg,
+                   bounds=[0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0])
         return WindowAudit(requests=len(buf), observed_dollars=observed,
                            opt_dollars_lower=lower, opt_dollars_upper=upper,
                            dollar_regret=reg, uniform=uniform,

@@ -12,6 +12,7 @@ exercises the production shapes.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 from typing import Any, Optional
@@ -46,14 +47,23 @@ class ServeEngine:
                  prefix_cache_bytes: float = 1 << 24,
                  policy: str = "gdsf", govern: bool = False,
                  governor_window: int = 64, hysteresis: float = 0.05,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None, events=None):
         self.model = model
         self.params = params
         self.store = store or ObjectStore("gcs_internet")
         self.metrics = metrics or MetricsRegistry()
+        # observability (DESIGN.md §9): one tracer threads through engine ->
+        # cache -> store so request/cache.get/store.get spans nest; the
+        # decision event log rides on the cache
+        self.tracer = tracer
+        self.events = events
+        if tracer is not None:
+            self.store.set_tracer(tracer)
         self.cache = EgressCache(self.store, prefix_cache_bytes, policy,
                                  consumer="serve_prefix_cache",
-                                 metrics=self.metrics)
+                                 metrics=self.metrics, tracer=tracer,
+                                 events=events)
         self.governor: Optional[DollarGovernor] = None
         if govern:
             auditor = WindowedAuditor(prefix_cache_bytes,
@@ -81,8 +91,20 @@ class ServeEngine:
                 self.store.put(key, blob)
         return logits, caches
 
+    def _span(self, name: str, **attrs):
+        """Engine-level span, or a nullcontext when tracing is off."""
+        if not self.tracer:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, cat="serve", **attrs)
+
     def serve(self, requests: list[Request]) -> list[Request]:
         """Batch requests of equal prompt length and decode greedily."""
+        with self._span("serve.batch", requests=len(requests)):
+            self._serve(requests)
+        self.metrics.inc("serve.requests", len(requests))
+        return requests
+
+    def _serve(self, requests: list[Request]) -> None:
         by_len: dict[int, list[Request]] = {}
         for r in requests:
             by_len.setdefault(len(r.prompt), []).append(r)
@@ -92,34 +114,39 @@ class ServeEngine:
             for r in group:
                 key = _prefix_key(r.prompt)
                 if self.store.contains(key):
-                    self.cache.get(key)
-            logits, caches = self._prefill_batch(prompts)
+                    with self._span("serve.request", rid=r.rid):
+                        self.cache.get(key)
+            with self._span("serve.prefill", batch=len(group)):
+                logits, caches = self._prefill_batch(prompts)
             S = prompts.shape[1]
             max_new = max(r.max_new_tokens for r in group)
             caches = _grow(self.model, caches, S + max_new)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             outs = [tok]
-            for step in range(max_new - 1):
-                logits, caches = self._decode(self.params, tok, caches,
-                                              jnp.int32(S + step))
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
-                outs.append(tok)
+            with self._span("serve.decode", batch=len(group), steps=max_new):
+                for step in range(max_new - 1):
+                    logits, caches = self._decode(self.params, tok, caches,
+                                                  jnp.int32(S + step))
+                    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                    outs.append(tok)
             gen = np.stack([np.asarray(t) for t in outs], 1)
             for i, r in enumerate(group):
                 r.output = gen[i][:r.max_new_tokens]
-        self.metrics.inc("serve.requests", len(requests))
-        return requests
 
     def audit(self):
         return self.cache.audit()
 
     def governance_snapshot(self) -> dict:
-        """Metrics + governor state, the JSON-exportable operational view."""
+        """Metrics + governor + obs state, the JSON-exportable view."""
         snap = dict(metrics=self.metrics.snapshot(),
                     store=self.store.meter.snapshot(),
                     consumers=self.store.consumer_snapshot())
         if self.governor is not None:
             snap["governor"] = self.governor.snapshot()
+        if self.events is not None:
+            snap["events"] = self.events.snapshot()
+        if self.tracer:
+            snap["spans"] = self.tracer.to_dicts()
         return snap
 
 

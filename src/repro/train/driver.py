@@ -104,11 +104,13 @@ class TrainDriver:
                 self.failure.maybe_fail(self.step)
             batch = self.pipeline.next_batch()
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            t0 = time.time()
+            # perf_counter: monotonic — wall-clock (NTP) skew would corrupt
+            # the straggler detector's step-time medians
+            t0 = time.perf_counter()
             loss, self.params, self.opt_state = self.train_step(
                 self.params, self.opt_state, batch)
             loss = float(loss)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             self.step_times.append(dt)
             med = float(np.median(self.step_times[-20:]))
             if len(self.step_times) > 5 and dt > self.cfg.straggler_factor * med:
