@@ -1,0 +1,120 @@
+"""Fleet governance vs every fixed policy on the partitioned regime shift.
+
+The fleet instantiation of the governance scenario (DESIGN.md §10): four
+hosts hash-partition the regime-shift trace, the price vector flips across
+s* mid-stream, and no fixed policy wins both phases on the partitions —
+LRU wins the fee-dominated phase, LFU the egress-dominated one. A governed
+fleet (sharded shadow panels -> gossiped `WindowDelta`s -> quorum swap)
+must detect the flip from windowed evidence alone and land fleet-wide on
+the post-flip winner.
+
+Emits per-policy fixed-fleet dollars, the governed fleet's dollars /
+regret / swap count (the within-10%-of-best-fixed acceptance check), and a
+faulty-network variant (drop+duplicate+reorder+delay) asserting the swap
+count stays bounded — hysteresis plus decide-once windows prevent churn no
+matter how evidence is delivered. Also exports the converged fleet
+snapshot to `benchmarks/out/fleet_snapshot.json`, which CI validates
+against `tests/schemas/fleet.json`.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+from repro.egress.cache import EgressCache, ONLINE_POLICIES
+from repro.fleet import Fleet, SimNetwork, hash_partition
+from repro.online.scenario import regime_shift_scenario
+
+from .common import OUT_DIR, emit, timed
+
+# locked-in fleet scenario (tests/test_fleet.py uses the same parameters)
+SCENARIO = dict(n_phase=3000, seed=0, n_big_active=12, big_bytes=1 << 18)
+N_NODES = 4
+FLEET_KW = dict(window_span=400.0, max_skew=32.0, gossip_every=100)
+
+
+def run_fixed_fleet(sc, policy):
+    store = sc.make_store()
+    caches = [EgressCache(store, sc.capacity_bytes / N_NODES, policy,
+                          consumer=f"edge{i}") for i in range(N_NODES)]
+    hits = reqs = 0
+    for t, key in enumerate(sc.keys):
+        if t == sc.flip_at:
+            store.set_price(sc.price_b)
+        c = caches[hash_partition(key, N_NODES)]
+        h0 = c.hits
+        c.get(key)
+        hits += c.hits - h0
+        reqs += 1
+    return dict(policy=policy,
+                dollars=math.fsum(c.meter.dollars for c in caches),
+                hit_rate=hits / reqs)
+
+
+def run_governed_fleet(sc, network=None, seed=1):
+    store = sc.make_store()
+    fleet = Fleet(store=store, n_nodes=N_NODES,
+                  capacity_bytes=sc.capacity_bytes / N_NODES,
+                  policy="lru", network=network, seed=seed, **FLEET_KW)
+    for t, key in enumerate(sc.keys):
+        if t == sc.flip_at:
+            store.set_price(sc.price_b)
+        fleet.access(key, event_time=t)
+    fleet.flush()
+    return fleet
+
+
+def run_panel():
+    sc = regime_shift_scenario(**SCENARIO)
+    fixed = {p: run_fixed_fleet(sc, p) for p in ONLINE_POLICIES}
+    fleet = run_governed_fleet(sc)
+    faulty_net = SimNetwork(seed=3, drop=0.25, duplicate=0.3, reorder=0.5,
+                            max_delay=2)
+    faulty = run_governed_fleet(sc, network=faulty_net)
+    return dict(scenario=sc, fixed=fixed, fleet=fleet, faulty=faulty)
+
+
+def main():
+    res, dt = timed(run_panel, repeats=1)
+    fixed, fleet, faulty = res["fixed"], res["fleet"], res["faulty"]
+    best = min(fixed.values(), key=lambda r: r["dollars"])
+    for p, r in fixed.items():
+        reg = (r["dollars"] - best["dollars"]) / best["dollars"]
+        emit(f"fleet_fixed_{p}", 0.0,
+             f"dollars={r['dollars']:.6f};regret_vs_best={reg:.3f};"
+             f"hit_rate={r['hit_rate']:.3f}")
+
+    g = fleet.dollars()
+    greg = (g - best["dollars"]) / best["dollars"]
+    emit("fleet_governed", dt,
+         f"dollars={g:.6f};regret_vs_best={greg:.3f};"
+         f"best_fixed={best['policy']};final={fleet.policy};"
+         f"swaps={len(fleet.swaps)};converged={fleet.converged()}")
+    emit("fleet_within_10pct", 0.0, f"ok={greg <= 0.10}")
+
+    # billing identity: realized fleet bill == fsum of per-node audits
+    audits = fleet.audits()
+    audit_sum = math.fsum(a.observed_dollars for a in audits.values()
+                          if a is not None)
+    emit("fleet_billing_reconciles", 0.0,
+         f"ok={g == audit_sum};fleet={g!r};audits={audit_sum!r}")
+
+    f = faulty.dollars()
+    freg = (f - best["dollars"]) / best["dollars"]
+    ns = faulty.network.snapshot()
+    emit("fleet_governed_faulty", 0.0,
+         f"dollars={f:.6f};regret_vs_best={freg:.3f};"
+         f"swaps={len(faulty.swaps)};converged={faulty.converged()};"
+         f"dropped={ns['dropped']};duplicated={ns['duplicated']};"
+         f"reordered={ns['reordered']}")
+    emit("fleet_faulty_swaps_bounded", 0.0,
+         f"ok={len(faulty.swaps) <= 3};swaps={len(faulty.swaps)}")
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / "fleet_snapshot.json"
+    path.write_text(json.dumps(fleet.snapshot(), indent=2) + "\n")
+    emit("fleet_snapshot_export", 0.0, f"path={path.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ from __future__ import annotations
 import sys
 
 from . import (bench_cdn, bench_contention, bench_costfoo, bench_crossover,
-               bench_exact, bench_flow_scale, bench_governor,
+               bench_exact, bench_fleet, bench_flow_scale, bench_governor,
                bench_heterogeneity, bench_kernels, bench_policy_throughput,
                common)
 
@@ -27,6 +27,7 @@ ALL = {
     "policy_throughput": bench_policy_throughput.main,  # JAX replay engine
     "kernels": bench_kernels.main,                # Pallas vs oracle
     "governor": bench_governor.main,              # online governance (§8)
+    "fleet": bench_fleet.main,                    # fleet governance (§10)
 }
 
 

@@ -46,13 +46,19 @@ _cache_counter = itertools.count()
 class AccessEvent:
     """One cache access, as seen by governance listeners (shadow panel,
     windowed audit, metrics). Carries everything a metadata-only replica
-    needs — no object bytes, no store traffic."""
+    needs — no object bytes, no store traffic.
+
+    `event_time` is the access's position on the *event-time* axis (a fleet
+    replaying a partitioned trace stamps the global trace index here, so
+    windows align across hosts despite skewed arrival); it defaults to the
+    cache-local clock when the caller doesn't provide one."""
     key: str
     nbytes: int
     hit: bool
     miss_cost: float   # c = f + s*e at the price in effect NOW
     policy: str
     clock: int
+    event_time: float = -1.0   # filled with float(clock) when not supplied
 
 
 class AdmissionController(Protocol):
@@ -202,21 +208,21 @@ class EgressCache:
                                policy)
 
     # ------------------------------------------------------------------
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, event_time: Optional[float] = None) -> bytes:
         t = self.tracer
         if not t:
-            return self._lookup(key)
+            return self._lookup(key, event_time)
         sp = t.begin("cache.get", "cache")
         try:
             h0 = self.hits
-            data = self._lookup(key)
+            data = self._lookup(key, event_time)
             sp.attrs = {"key": key, "bytes": len(data),
                         "hit": self.hits > h0, "policy": self.policy}
             return data
         finally:
             t.end(sp)
 
-    def _lookup(self, key: str) -> bytes:
+    def _lookup(self, key: str, event_time: Optional[float] = None) -> bytes:
         self._clock += 1
         self._trace_keys.append(key)
         self._freq[key] = self._freq.get(key, 0) + 1
@@ -224,7 +230,7 @@ class EgressCache:
             self.hits += 1
             data = self._data[key]
             self._touch(key, len(data))
-            self._emit(key, len(data), hit=True)
+            self._emit(key, len(data), True, event_time)
             return data
         self.misses += 1
         data = self.store.get(key, consumer=self.consumer)   # billed fetch
@@ -239,14 +245,15 @@ class EgressCache:
             self._data[key] = data
             self.used += nbytes
             self._touch(key, nbytes)
-        self._emit(key, nbytes, hit=False)
+        self._emit(key, nbytes, False, event_time)
         if self.events is not None:
             self.events.record("admit" if admit else "reject", key, nbytes,
                                0.0, self._miss_cost(nbytes), self._clock,
                                self.policy)
         return data
 
-    def _emit(self, key: str, nbytes: int, hit: bool) -> None:
+    def _emit(self, key: str, nbytes: int, hit: bool,
+              event_time: Optional[float] = None) -> None:
         mc = None
         if self.metrics is not None:
             self.metrics.inc(self._m_hits if hit else self._m_misses)
@@ -267,7 +274,9 @@ class EgressCache:
                                    self.policy)
             if self._listeners:
                 ev = AccessEvent(key, nbytes, hit, mc, self.policy,
-                                 self._clock)
+                                 self._clock,
+                                 float(self._clock) if event_time is None
+                                 else float(event_time))
                 for fn in self._listeners:
                     fn(ev)
 

@@ -1,0 +1,8 @@
+# Model zoo: ArchConfig-driven dense / MoE / recurrent / enc-dec families
+# behind one ModelApi (prefill + decode_step is all serve needs).
+from .common import (ArchConfig, ParamDef, abstract_params, axes_tree,
+                     init_params)
+from .registry import ModelApi, get_model
+
+__all__ = ["ArchConfig", "ParamDef", "init_params", "abstract_params",
+           "axes_tree", "ModelApi", "get_model"]

@@ -6,11 +6,12 @@
 #   governor  — hysteresis policy hot-swap driven by windowed shadow dollars
 from .metrics import MetricsRegistry
 from .shadow import ShadowCache, ShadowPanel
-from .window import WindowAudit, WindowedAuditor
+from .window import Watermark, WindowAudit, WindowedAuditor
 from .admission import SStarAdmission
 from .governor import DollarGovernor, SwapEvent
 
 __all__ = [
-    "MetricsRegistry", "ShadowCache", "ShadowPanel", "WindowAudit",
-    "WindowedAuditor", "SStarAdmission", "DollarGovernor", "SwapEvent",
+    "MetricsRegistry", "ShadowCache", "ShadowPanel", "Watermark",
+    "WindowAudit", "WindowedAuditor", "SStarAdmission", "DollarGovernor",
+    "SwapEvent",
 ]

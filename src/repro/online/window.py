@@ -14,7 +14,7 @@ the table RIGHT NOW" signal, published to the metrics registry.
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 from typing import Optional
 
@@ -23,7 +23,48 @@ import numpy as np
 from repro.core import Trace, cost_foo, exact_opt_uniform_sweep
 from repro.egress.cache import AccessEvent
 
-__all__ = ["WindowAudit", "WindowedAuditor"]
+__all__ = ["Watermark", "WindowAudit", "WindowedAuditor"]
+
+
+class Watermark:
+    """Event-time watermark with a bounded-skew guarantee.
+
+    Tracks the maximum event time seen; the watermark trails it by
+    `max_skew`, so any event at or after the watermark may still arrive.
+    `advance(t)` ingests one event time, asserts its lateness stays within
+    the bound (a violation means the clock-skew model is broken, not that
+    an event is merely late), and returns the new watermark. Shared by the
+    fleet nodes' tumbling windows (`repro.fleet.node`) and by
+    `WindowedAuditor`'s out-of-order tolerance below.
+    """
+
+    __slots__ = ("max_skew", "max_time", "events", "late")
+
+    def __init__(self, max_skew: float = 0.0):
+        assert max_skew >= 0.0, max_skew
+        self.max_skew = float(max_skew)
+        self.max_time = float("-inf")
+        self.events = 0
+        self.late = 0          # events that arrived behind max_time
+
+    @property
+    def value(self) -> float:
+        """Current watermark: no event older than this will be accepted."""
+        return self.max_time - self.max_skew
+
+    def advance(self, event_time: float) -> float:
+        t = float(event_time)
+        self.events += 1
+        if t >= self.max_time:
+            self.max_time = t
+        else:
+            self.late += 1
+            if self.max_time - t > self.max_skew:
+                raise ValueError(
+                    f"event time {t} is {self.max_time - t:.6g} behind the "
+                    f"stream maximum {self.max_time}; bounded skew is "
+                    f"{self.max_skew:.6g}")
+        return self.value
 
 
 @dataclasses.dataclass
@@ -45,24 +86,44 @@ class WindowAudit:
 
 
 class WindowedAuditor:
-    """Ring buffer + on-demand exact bracket of OPT-dollars on the window."""
+    """Ring buffer + on-demand exact bracket of OPT-dollars on the window.
+
+    Events are buffered in *event-time* order, not arrival order: a late
+    event (skewed delivery from a fleet peer, an out-of-order replay) is
+    insorted into its true position so the audit replays the trace the
+    accesses actually formed. Lateness is bounded by the shared `Watermark`
+    helper (`max_skew`, default: the window length in event-time units) —
+    an event older than that is a broken clock model and raises.
+    """
 
     def __init__(self, capacity_bytes: float, window: int = 2048,
                  budget_grid=None, metrics=None,
-                 series_name: str = "online.window_regret"):
+                 series_name: str = "online.window_regret",
+                 max_skew: Optional[float] = None):
         self.capacity = float(capacity_bytes)
         self.window = int(window)
         self.budget_grid = (None if budget_grid is None
                             else np.asarray(budget_grid, np.int64))
         self.metrics = metrics
         self.series_name = series_name
-        self._buf: collections.deque = collections.deque(maxlen=self.window)
+        self.watermark = Watermark(float(self.window)
+                                   if max_skew is None else max_skew)
+        # sorted by (event_time, arrival seq): (t, seq, key, nbytes, mc, hit)
+        self._buf: list[tuple] = []
         self._seen = 0
         self.audits = 0
 
     def on_event(self, ev: AccessEvent) -> None:
-        self._buf.append((ev.key, ev.nbytes, ev.miss_cost, ev.hit))
+        self.watermark.advance(ev.event_time)   # asserts bounded skew
         self._seen += 1
+        entry = (ev.event_time, self._seen, ev.key, ev.nbytes,
+                 ev.miss_cost, ev.hit)
+        if not self._buf or entry >= self._buf[-1]:
+            self._buf.append(entry)             # in-order fast path
+        else:
+            bisect.insort(self._buf, entry)     # late: fold into position
+        if len(self._buf) > self.window:
+            del self._buf[0]
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -77,7 +138,7 @@ class WindowedAuditor:
         sizes: list[float] = []
         costs: list[float] = []
         observed = 0.0
-        for t, (key, nbytes, mc, hit) in enumerate(buf):
+        for t, (_et, _seq, key, nbytes, mc, hit) in enumerate(buf):
             i = uniq.get(key)
             if i is None:
                 i = uniq[key] = len(sizes)

@@ -1,0 +1,7 @@
+# Sharding layer: logical-axis -> mesh-axis rules (FSDP + TP) shared by
+# train and serve step assembly.
+from .sharding import (ShardingRules, batch_spec, kv_cache_sharding,
+                       make_rules, mesh_axis_size, params_sharding)
+
+__all__ = ["ShardingRules", "make_rules", "params_sharding", "batch_spec",
+           "kv_cache_sharding", "mesh_axis_size"]

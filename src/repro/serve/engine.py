@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.egress.cache import EgressCache
 from repro.egress.store import ObjectStore
+from repro.fleet import Fleet
 from repro.models.registry import ModelApi
 from repro.online import DollarGovernor, MetricsRegistry, WindowedAuditor
 
@@ -48,7 +49,7 @@ class ServeEngine:
                  policy: str = "gdsf", govern: bool = False,
                  governor_window: int = 64, hysteresis: float = 0.05,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer=None, events=None):
+                 tracer=None, events=None, fleet_nodes: int = 0):
         self.model = model
         self.params = params
         self.store = store or ObjectStore("gcs_internet")
@@ -60,10 +61,27 @@ class ServeEngine:
         self.events = events
         if tracer is not None:
             self.store.set_tracer(tracer)
-        self.cache = EgressCache(self.store, prefix_cache_bytes, policy,
-                                 consumer="serve_prefix_cache",
-                                 metrics=self.metrics, tracer=tracer,
-                                 events=events)
+        # fleet mode (DESIGN.md §10): partition the prefix cache across
+        # `fleet_nodes` hash-sharded hosts, each with its own billing meter
+        # and shadow panel, governed by quorum swaps over gossip; the
+        # single-host cache and governor are replaced wholesale
+        assert not (govern and fleet_nodes), \
+            "govern= and fleet_nodes= are mutually exclusive governors"
+        self.fleet: Optional[Fleet] = None
+        self.cache: Optional[EgressCache] = None
+        if fleet_nodes:
+            self.fleet = Fleet(
+                store=self.store, n_nodes=fleet_nodes,
+                capacity_bytes=prefix_cache_bytes / fleet_nodes,
+                policy=policy, window_span=4.0 * governor_window,
+                max_skew=float(governor_window),
+                gossip_every=governor_window,
+                events=events, metrics=self.metrics)
+        else:
+            self.cache = EgressCache(self.store, prefix_cache_bytes, policy,
+                                     consumer="serve_prefix_cache",
+                                     metrics=self.metrics, tracer=tracer,
+                                     events=events)
         self.governor: Optional[DollarGovernor] = None
         if govern:
             auditor = WindowedAuditor(prefix_cache_bytes,
@@ -115,7 +133,10 @@ class ServeEngine:
                 key = _prefix_key(r.prompt)
                 if self.store.contains(key):
                     with self._span("serve.request", rid=r.rid):
-                        self.cache.get(key)
+                        if self.fleet is not None:
+                            self.fleet.access(key)
+                        else:
+                            self.cache.get(key)
             with self._span("serve.prefill", batch=len(group)):
                 logits, caches = self._prefill_batch(prompts)
             S = prompts.shape[1]
@@ -134,6 +155,10 @@ class ServeEngine:
                 r.output = gen[i][:r.max_new_tokens]
 
     def audit(self):
+        """Exact offline audit: per-host dict in fleet mode (each host's
+        own partition trace), single audit otherwise."""
+        if self.fleet is not None:
+            return self.fleet.audits()
         return self.cache.audit()
 
     def governance_snapshot(self) -> dict:
@@ -143,6 +168,8 @@ class ServeEngine:
                     consumers=self.store.consumer_snapshot())
         if self.governor is not None:
             snap["governor"] = self.governor.snapshot()
+        if self.fleet is not None:
+            snap["fleet"] = self.fleet.snapshot()
         if self.events is not None:
             snap["events"] = self.events.snapshot()
         if self.tracer:

@@ -1,0 +1,313 @@
+"""Fleet governance: wire format, event-time windows, gossip, quorum swaps.
+
+The acceptance scenario is the partitioned regime shift: 4 hosts hash-
+partition a trace whose pricing flips mid-stream across s*, LRU wins the
+fee-heavy phase on every partition and LFU wins the egress-heavy phase, so
+a governed fleet that starts at LRU must quorum-swap after the flip to
+match the best fixed policy.
+"""
+import math
+
+import pytest
+
+from repro.egress.cache import EgressCache, ONLINE_POLICIES, AccessEvent
+from repro.egress.store import ObjectStore
+from repro.fleet import (Fleet, FleetCoordinator, FleetNode, GossipState,
+                         SimNetwork, WindowDelta, WireError,
+                         access_event_from_json, access_event_to_json,
+                         decode, decode_access_event, decode_window_delta,
+                         encode_access_event, encode_window_delta,
+                         hash_partition)
+from repro.online import Watermark
+from repro.online.scenario import regime_shift_scenario
+
+# locked-in fleet regime-shift parameters (see benchmarks/bench_fleet.py:
+# LRU wins phase A on every partition, LFU wins phase B by ~2x)
+SCENARIO = dict(n_phase=3000, seed=0, n_big_active=12, big_bytes=1 << 18)
+N_NODES = 4
+FLEET_KW = dict(window_span=400.0, max_skew=32.0, gossip_every=100)
+
+
+def _scenario():
+    return regime_shift_scenario(**SCENARIO)
+
+
+def _run_fixed_fleet(sc, policy, n=N_NODES):
+    """Fleet of fixed-policy caches over the hash-partitioned trace."""
+    store = sc.make_store()
+    caches = [EgressCache(store, sc.capacity_bytes / n, policy,
+                          consumer=f"edge{i}") for i in range(n)]
+    for t, key in enumerate(sc.keys):
+        if t == sc.flip_at:
+            store.set_price(sc.price_b)
+        caches[hash_partition(key, n)].get(key)
+    return math.fsum(c.meter.dollars for c in caches)
+
+
+def _run_governed_fleet(sc, network=None, seed=1):
+    store = sc.make_store()
+    fleet = Fleet(store=store, n_nodes=N_NODES,
+                  capacity_bytes=sc.capacity_bytes / N_NODES,
+                  policy="lru", network=network, seed=seed, **FLEET_KW)
+    for t, key in enumerate(sc.keys):
+        if t == sc.flip_at:
+            store.set_price(sc.price_b)
+        fleet.access(key, event_time=t)
+    assert fleet.flush()
+    return fleet
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def _event(mc=0.09 + 1e-10):
+    return AccessEvent("obj/α-17", 123_456, False, mc, "gdsf", 42, 1234.5)
+
+
+def test_access_event_binary_round_trip_bit_equal():
+    ev = _event()
+    back = decode_access_event(encode_access_event(ev))
+    assert back == ev
+    assert math.copysign(1, back.miss_cost) == math.copysign(1, ev.miss_cost)
+    assert back.miss_cost.hex() == ev.miss_cost.hex()     # bit-equal
+
+
+def test_access_event_json_round_trip_bit_equal():
+    ev = _event(mc=0.1 + 0.2)      # classic non-representable decimal
+    line = access_event_to_json(ev)
+    assert access_event_from_json(line) == ev
+
+
+def test_window_delta_round_trip():
+    d = WindowDelta("edge3", 17, 9, 7231.0, 412,
+                    {p: 0.001 * (i + 1) for i, p in enumerate(ONLINE_POLICIES)})
+    assert decode_window_delta(encode_window_delta(d)) == d
+    assert decode(encode_window_delta(d)) == d
+    assert decode(encode_access_event(_event())) == _event()
+
+
+def test_wire_rejects_corruption():
+    frame = bytearray(encode_access_event(_event()))
+    frame[10] ^= 0xFF
+    with pytest.raises(WireError):
+        decode_access_event(bytes(frame))
+    with pytest.raises(WireError):
+        decode_access_event(b"XX" + bytes(frame[2:]))     # bad magic
+    with pytest.raises(WireError):
+        decode_access_event(bytes(frame[:5]))             # truncated
+    # kind mismatch: a valid WindowDelta frame is not an AccessEvent
+    wd = encode_window_delta(WindowDelta("h", 0, 1, 0.0, 0, {}))
+    with pytest.raises(WireError):
+        decode_access_event(wd)
+
+
+def test_wire_rejects_future_version():
+    frame = bytearray(encode_access_event(_event()))
+    frame[2] += 1                                         # bump version
+    import binascii
+    import struct
+    frame[-4:] = struct.pack("<I", binascii.crc32(bytes(frame[:-4])))
+    with pytest.raises(WireError, match="version"):
+        decode_access_event(bytes(frame))
+
+
+# ---------------------------------------------------------------------------
+# watermark + node windows
+# ---------------------------------------------------------------------------
+
+def test_watermark_tolerates_bounded_skew_rejects_beyond():
+    wm = Watermark(max_skew=5.0)
+    wm.advance(10.0)
+    wm.advance(6.0)                # late by 4 < 5: ok
+    assert wm.value == 5.0
+    assert wm.late == 1
+    with pytest.raises(ValueError):
+        wm.advance(4.0)            # late by 6 > 5: out of contract
+
+
+def test_node_emits_contiguous_windows_and_replays_bill_bit_equal():
+    store = ObjectStore("s3_internet")
+    for i in range(8):
+        store.put(f"o{i}", bytes(1000))
+    node = FleetNode("edge0", store, 4000, "lru", window_span=10.0,
+                     max_skew=2.0)
+    # event times skip windows 2-3 entirely; skewed arrivals inside bound
+    for t in [0, 1, 5, 12, 11, 14, 47, 46, 55]:
+        node.access(f"o{t % 8}", float(t))
+    node.flush()
+    wids = [d.window_id for d in node.outbox]
+    assert wids == sorted(wids) == list(range(wids[-1] + 1))   # contiguous
+    empty = [d for d in node.outbox if d.events == 0]
+    assert empty                                # quiet windows still emitted
+    assert math.fsum(d.events for d in node.outbox) == 9
+    assert node.replayed_dollars() == node.cache.meter.dollars  # bit-equal
+
+
+# ---------------------------------------------------------------------------
+# gossip
+# ---------------------------------------------------------------------------
+
+def test_sim_network_deterministic_per_seed():
+    def run(seed):
+        net = SimNetwork(seed, drop=0.3, duplicate=0.3, reorder=0.5,
+                         max_delay=2)
+        for i in range(50):
+            net.send("a", "b", bytes([i]))
+        out = []
+        for _ in range(5):
+            out.append([f[2] for f in net.deliver()])
+        return out, net.snapshot()
+    assert run(7) == run(7)
+    assert run(7) != run(8)
+
+
+def test_gossip_merge_idempotent_commutative():
+    d1 = WindowDelta("h", 0, 1, 10.0, 5, {"lru": 0.5})
+    d2 = WindowDelta("h", 0, 2, 12.0, 6, {"lru": 0.6})   # higher seq wins
+    a, b = GossipState(), GossipState()
+    assert a.merge(d1) and a.merge(d2) and not a.merge(d1)  # stale ignored
+    assert b.merge(d2) and not b.merge(d1)
+    assert a.digest() == b.digest()
+    assert a.fleet_totals() == b.fleet_totals() == {"lru": 0.6}
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+
+def _delta(host, wid, dollars, seq=1):
+    return WindowDelta(host, wid, seq, 0.0, 10, dollars)
+
+
+def test_quorum_majority_swaps_and_never_double_applies():
+    co = FleetCoordinator(3, policy="lru", hysteresis=0.1)
+    better = {"lru": 1.0, "lfu": 0.5, "gds": 2.0, "gdsf": 2.0}
+    for h in ("a", "b", "c"):
+        co.ingest(_delta(h, 0, dict(better)))
+    applied = co.poll()
+    assert [s.new_policy for s in applied] == ["lfu"]
+    assert co.policy == "lfu"
+    # re-delivered evidence for the decided window is inert
+    for h in ("a", "b", "c"):
+        co.ingest(_delta(h, 0, dict(better), seq=2))
+    assert co.poll() == [] and len(co.swaps) == 1
+
+
+def test_quorum_waits_for_majority_and_in_order_windows():
+    co = FleetCoordinator(4, policy="lru")      # quorum = 3
+    win = {"lru": 1.0, "lfu": 0.1}
+    co.ingest(_delta("a", 0, dict(win)))
+    co.ingest(_delta("b", 0, dict(win)))
+    assert co.poll() == []                      # 2 < quorum
+    co.ingest(_delta("a", 1, dict(win)))
+    co.ingest(_delta("b", 1, dict(win)))
+    co.ingest(_delta("c", 1, dict(win)))
+    assert co.poll() == []                      # window 0 gaps the order
+    co.ingest(_delta("c", 0, dict(win)))
+    swaps = co.poll()                           # both decide, one swap
+    assert co.frontier == 1 and len(swaps) == 1
+
+
+def test_split_vote_quorum_keeps_incumbent_central_breaks_tie():
+    keep = {"lru": 1.0, "lfu": 0.99}
+    move = {"lru": 1.0, "lfu": 0.1}
+    for mode, expect in (("quorum", "lru"), ("central", "lfu")):
+        co = FleetCoordinator(4, policy="lru", mode=mode, quorum=4)
+        for h, d in zip("abcd", (keep, keep, move, move)):
+            co.ingest(_delta(h, 0, dict(d)))
+        co.poll()
+        assert co.policy == expect, mode
+        if mode == "central":
+            assert co.swaps[0].mode == "tiebreak"
+
+
+def test_zero_weight_windows_keep_incumbent():
+    co = FleetCoordinator(2, policy="lru")
+    for h in "ab":
+        co.ingest(_delta(h, 0, {}))
+    co.poll()
+    assert co.policy == "lru" and co.frontier == 0 and not co.swaps
+
+
+# ---------------------------------------------------------------------------
+# the 4-node acceptance scenario
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shifted():
+    sc = _scenario()
+    fixed = {p: _run_fixed_fleet(sc, p) for p in ONLINE_POLICIES}
+    fleet = _run_governed_fleet(sc)
+    return sc, fixed, fleet
+
+
+def test_fleet_regime_shift_quorum_swap_post_flip(shifted):
+    sc, fixed, fleet = shifted
+    flip_window = int(sc.flip_at // FLEET_KW["window_span"])
+    assert len(fleet.swaps) == 1
+    swap = fleet.swaps[0]
+    assert swap.old_policy == "lru"
+    # unanimous post-quorum policy across every node
+    assert {n.cache.policy for n in fleet.nodes} == {fleet.policy} \
+        == {swap.new_policy}
+    # decided within one gossip round of the watermark passing the flip:
+    # the flip window (or the one after, if the flip lands mid-window)
+    assert flip_window <= swap.window_id <= flip_window + 1
+    # and the swap target is the policy that actually wins post-flip
+    assert swap.new_policy == min(fixed, key=fixed.get)
+
+
+def test_fleet_dollars_within_10pct_of_best_fixed(shifted):
+    sc, fixed, fleet = shifted
+    best = min(fixed.values())
+    assert fleet.dollars() <= 1.10 * best
+    # and strictly better than the worst fixed policy (the flip has teeth)
+    assert fleet.dollars() < max(fixed.values())
+
+
+def test_fleet_billing_reconciles_bit_for_bit(shifted):
+    _sc, _fixed, fleet = shifted
+    # realized fleet bill == fsum of per-node audit observations, bit-equal
+    audits = fleet.audits()
+    assert fleet.dollars() == math.fsum(
+        a.observed_dollars for a in audits.values())
+    # each node's wire-log replay re-accrues its own meter bit-for-bit
+    for node in fleet.nodes:
+        assert node.replayed_dollars() == node.cache.meter.dollars
+    # converged participants agree on fleet-wide shadow totals
+    totals = fleet.fleet_shadow_totals()
+    for node in fleet.nodes:
+        assert node.state.fleet_totals() == totals
+
+
+def test_fleet_under_faults_converges_no_double_swap():
+    sc = _scenario()
+    net = SimNetwork(seed=3, drop=0.25, duplicate=0.3, reorder=0.5,
+                     max_delay=2)
+    fleet = _run_governed_fleet(sc, network=net)
+    assert net.dropped > 0 and net.duplicated > 0 and net.reordered > 0
+    # anti-entropy healed the faults
+    assert fleet.converged()
+    # each window decided at most once -> swaps never double-apply
+    wids = [s.window_id for s in fleet.swaps]
+    assert len(wids) == len(set(wids))
+    assert sorted(fleet.coordinator.decided) == \
+        list(range(fleet.coordinator.frontier + 1))
+    for node in fleet.nodes:
+        assert node.cache.policy_swaps == len(fleet.swaps)
+    # governance still lands the fleet on the post-flip winner
+    assert {n.cache.policy for n in fleet.nodes} == {fleet.policy}
+    # swap count stays bounded under faults (hysteresis prevents churn)
+    assert len(fleet.swaps) <= 3
+
+
+def test_fleet_snapshot_shapes():
+    sc = _scenario()
+    fleet = _run_governed_fleet(sc)
+    snap = fleet.snapshot()
+    assert snap["n_nodes"] == N_NODES
+    assert set(snap["nodes"]) == {f"edge{i}" for i in range(N_NODES)}
+    assert snap["coordinator"]["frontier"] >= 0
+    assert snap["network"]["sent"] > snap["network"]["dropped"]
+    assert snap["dollars"] == fleet.dollars()

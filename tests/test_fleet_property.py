@@ -1,0 +1,147 @@
+"""Property tests for the fleet wire format + gossip convergence.
+
+Guarded with `pytest.importorskip`: hypothesis is optional in the
+container, and collection must not die where it is absent (the fixed-seed
+cases in test_fleet.py cover the same contracts either way).
+
+Contracts under test:
+  * serialize -> deserialize round-trips every field, with dollars
+    (miss_cost / per-policy totals) bit-equal — `float.hex()` identity,
+    not approx;
+  * any single-byte corruption of a frame raises `WireError` (CRC-32
+    detects all burst errors <= 32 bits, so one flipped byte can never
+    half-parse), as does a version bump or a kind mismatch;
+  * anti-entropy gossip converges under drop+duplicate+reorder+delay for
+    every seed — merge idempotence/commutativity means faults change the
+    path, never the fixpoint.
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.egress.cache import ONLINE_POLICIES, AccessEvent  # noqa: E402
+from repro.fleet import (GossipState, SimNetwork, WindowDelta,  # noqa: E402
+                         WireError, access_event_from_json,
+                         access_event_to_json, decode_access_event,
+                         decode_window_delta, encode_access_event,
+                         encode_window_delta)
+
+finite_f64 = st.floats(allow_nan=False, allow_infinity=False, width=64)
+keys = st.text(min_size=1, max_size=40)
+
+events = st.builds(
+    AccessEvent,
+    key=keys,
+    nbytes=st.integers(0, 2**48),
+    hit=st.booleans(),
+    miss_cost=finite_f64,
+    policy=st.sampled_from(ONLINE_POLICIES),
+    clock=st.integers(0, 2**48),
+    event_time=finite_f64,
+)
+
+deltas = st.builds(
+    WindowDelta,
+    host=keys,
+    window_id=st.integers(0, 2**32),
+    seq=st.integers(0, 2**32),
+    watermark=finite_f64,
+    events=st.integers(0, 2**31),
+    dollars=st.dictionaries(st.sampled_from(ONLINE_POLICIES), finite_f64,
+                            max_size=len(ONLINE_POLICIES)),
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(events)
+def test_access_event_binary_round_trip(ev):
+    back = decode_access_event(encode_access_event(ev))
+    assert back == ev
+    assert back.miss_cost.hex() == ev.miss_cost.hex()       # bit-equal
+    assert back.event_time.hex() == ev.event_time.hex()
+
+
+@settings(max_examples=100, deadline=None)
+@given(events)
+def test_access_event_json_round_trip(ev):
+    back = access_event_from_json(access_event_to_json(ev))
+    assert back == ev
+    assert back.miss_cost.hex() == ev.miss_cost.hex()
+
+
+@settings(max_examples=100, deadline=None)
+@given(deltas)
+def test_window_delta_round_trip(d):
+    back = decode_window_delta(encode_window_delta(d))
+    assert back == d
+    for p, v in d.dollars.items():
+        assert back.dollars[p].hex() == v.hex()
+
+
+@settings(max_examples=100, deadline=None)
+@given(events, st.data())
+def test_single_byte_corruption_always_rejected(ev, data):
+    frame = bytearray(encode_access_event(ev))
+    pos = data.draw(st.integers(0, len(frame) - 1))
+    mask = data.draw(st.integers(1, 255))
+    frame[pos] ^= mask
+    with pytest.raises(WireError):
+        decode_access_event(bytes(frame))
+
+
+@settings(max_examples=50, deadline=None)
+@given(events, st.integers(1, 254))
+def test_version_bump_rejected_even_with_valid_crc(ev, bump):
+    import binascii
+    import struct
+    frame = bytearray(encode_access_event(ev))
+    frame[2] = (frame[2] + bump) % 256
+    frame[-4:] = struct.pack("<I", binascii.crc32(bytes(frame[:-4])))
+    with pytest.raises(WireError):
+        decode_access_event(bytes(frame))
+
+
+@settings(max_examples=50, deadline=None)
+@given(deltas)
+def test_kind_mismatch_rejected(d):
+    with pytest.raises(WireError):
+        decode_access_event(encode_window_delta(d))
+
+
+# ---------------------------------------------------------------------------
+# gossip convergence under faults, deterministic per seed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(10))
+def test_gossip_converges_under_faults_deterministic(seed):
+    """Anti-entropy over a faulty switch reaches the unique fixpoint: the
+    union of everyone's deltas, identical dollars at every participant."""
+    hosts = [f"h{i}" for i in range(4)]
+    states = {h: GossipState() for h in hosts}
+    for i, h in enumerate(hosts):
+        for w in range(3):
+            states[h].merge(WindowDelta(h, w, w + 1, float(w), 1,
+                                        {"lru": 0.25 * (i + 1) + w}))
+    net = SimNetwork(seed, drop=0.3, duplicate=0.3, reorder=0.5, max_delay=2)
+    rounds = 0
+    while len({s.digest() for s in states.values()}) > 1:
+        rounds += 1
+        assert rounds <= 50, "gossip failed to converge"
+        for h in hosts:
+            frames = [encode_window_delta(d)
+                      for d in states[h].deltas.values()]
+            for peer in hosts:
+                if peer != h:
+                    for f in frames:
+                        net.send(h, peer, f)
+        for dst, _src, frame in net.deliver():
+            states[dst].merge(decode_window_delta(frame))
+    totals = [s.fleet_totals() for s in states.values()]
+    assert all(t == totals[0] for t in totals)
+    assert len(states[hosts[0]].deltas) == len(hosts) * 3
+    expect = math.fsum(0.25 * (i + 1) + w
+                       for i in range(4) for w in range(3))
+    assert totals[0]["lru"] == expect

@@ -322,6 +322,28 @@ def test_governance_snapshot_validates_against_checked_in_schema(tmp_path):
     assert errs == [], errs
 
 
+def test_fleet_snapshot_validates_against_checked_in_schema():
+    import pathlib
+
+    from repro.fleet import Fleet
+    store = ObjectStore("s3_internet")
+    for i in range(8):
+        store.put(f"o{i}", bytes(1500))
+    fleet = Fleet(store=store, n_nodes=3, capacity_bytes=4500,
+                  window_span=8.0, max_skew=2.0, gossip_every=4)
+    for t in range(60):
+        fleet.access(f"o{t % 8}", event_time=float(t))
+    fleet.flush()
+    snap = json.loads(json.dumps(fleet.snapshot()))
+    schemas = pathlib.Path(__file__).parent / "schemas"
+    errs = validate(snap, json.loads((schemas / "fleet.json").read_text()))
+    assert errs == [], errs
+    # the obs governance snapshot carries the same shape under "fleet"
+    obs_schema = json.loads((schemas / "obs.json").read_text())
+    errs = validate(snap, obs_schema["properties"]["fleet"])
+    assert errs == [], errs
+
+
 # ---------------------------------------------------------------------------
 # acceptance: full governed ServeEngine run, spans sum to the meter
 
@@ -360,3 +382,57 @@ def test_governed_serve_span_dollars_equal_meter():
         assert by_id[s.parent_id].name in ("serve.request", "serve.batch")
     snap = engine.governance_snapshot()
     assert "events" in snap and "spans" in snap
+
+
+# ---------------------------------------------------------------------------
+# NDJSON stream write-through + OTLP export
+
+
+def test_tracer_stream_writes_through_ring_eviction():
+    import io
+    buf = io.StringIO()
+    t = Tracer(max_spans=3, stream=buf)
+    for i in range(10):
+        with t.span(f"op{i}", cat="w", dollars=0.125 * i):
+            pass
+    assert t.dropped == 7                       # ring kept only the last 3
+    lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+    assert [d["name"] for d in lines] == [f"op{i}" for i in range(10)]
+    assert lines[4]["args"]["dollars"] == 0.5   # evicted span survived
+
+
+def test_tracer_otlp_export_shape():
+    t = Tracer()
+    with t.span("outer", cat="test", consumer="c", dollars=0.25,
+                nbytes=4096, hit=False):
+        with t.span("inner", cat="test"):
+            pass
+    o = t.to_otlp(service_name="svc")
+    res = o["resourceSpans"][0]
+    assert {"key": "service.name", "value": {"stringValue": "svc"}} \
+        in res["resource"]["attributes"]
+    spans = res["scopeSpans"][0]["spans"]
+    assert len(spans) == 2
+    by_name = {s["name"]: s for s in spans}
+    inner, outer = by_name["inner"], by_name["outer"]
+    for s in spans:                             # OTLP id + time invariants
+        assert re.fullmatch(r"[0-9a-f]{32}", s["traceId"])
+        assert re.fullmatch(r"[0-9a-f]{16}", s["spanId"])
+        assert int(s["endTimeUnixNano"]) >= int(s["startTimeUnixNano"]) > 0
+    assert inner["parentSpanId"] == outer["spanId"]     # nesting preserved
+    assert outer["parentSpanId"] == ""
+    attrs = {a["key"]: a["value"] for a in outer["attributes"]}
+    assert attrs["dollars"] == {"doubleValue": 0.25}
+    assert attrs["nbytes"] == {"intValue": "4096"}      # i64 rides as string
+    assert attrs["hit"] == {"boolValue": False}
+    assert attrs["consumer"] == {"stringValue": "c"}
+    json.dumps(o)                               # fully JSON-serializable
+    assert NullTracer().to_otlp() == {"resourceSpans": []}
+
+
+def test_tracer_write_otlp_file(tmp_path):
+    t = Tracer()
+    with t.span("op", cat="t"):
+        pass
+    p = t.write_otlp(tmp_path / "otlp.json")
+    assert json.loads(p.read_text())["resourceSpans"]

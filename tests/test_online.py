@@ -195,6 +195,37 @@ def test_empty_window_audit_is_none():
     assert aud.audit() is None
 
 
+def test_window_audit_tolerates_out_of_order_event_times():
+    """Events delivered out of event-time order (within the skew bound)
+    audit identically to the same events delivered sorted: the buffer
+    insorts by event time through the shared Watermark helper."""
+    from repro.egress.cache import AccessEvent
+    rng = np.random.default_rng(11)
+    evs = [AccessEvent(f"o{i % 7}", 4096, bool(i % 3), 0.001 * (i % 5 + 1),
+                       "lru", i, float(i)) for i in range(120)]
+    # bounded shuffle: displace each event by < max_skew positions
+    skewed = list(evs)
+    for i in range(0, len(skewed) - 4, 4):
+        seg = skewed[i:i + 4]
+        rng.shuffle(seg)
+        skewed[i:i + 4] = seg
+    ordered, jumbled = (WindowedAuditor(8 * 4096, window=64, max_skew=8.0)
+                        for _ in range(2))
+    for ev in evs:
+        ordered.on_event(ev)
+    for ev in skewed:
+        jumbled.on_event(ev)
+    assert jumbled.watermark.late > 0          # the shuffle did something
+    a, b = ordered.audit(), jumbled.audit()
+    assert (a.observed_dollars, a.opt_dollars_lower, a.requests) == \
+        (b.observed_dollars, b.opt_dollars_lower, b.requests)
+    # beyond the bound the clock model is broken, not merely late
+    strict = WindowedAuditor(8 * 4096, window=64, max_skew=2.0)
+    strict.on_event(evs[50])
+    with pytest.raises(ValueError):
+        strict.on_event(evs[10])
+
+
 # ---------------------------------------------------------------------------
 # s*-aware admission
 # ---------------------------------------------------------------------------

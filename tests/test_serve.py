@@ -56,3 +56,34 @@ def test_mixed_lengths_batched_by_length():
             Request(2, rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 2)]
     done = engine.serve(reqs)
     assert all(r.output is not None for r in done)
+
+def test_fleet_mode_partitions_prefix_cache():
+    """fleet_nodes>0 shards the prefix cache across hash-partitioned
+    hosts with their own meters; the engine's audit becomes per-host and
+    the governance snapshot carries the fleet state."""
+    import math
+
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, prefix_cache_bytes=1 << 22,
+                         policy="lru", fleet_nodes=3, governor_window=4)
+    rng = np.random.default_rng(7)
+    hot = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+           for _ in range(3)]
+    rid = 0
+    for _ in range(4):
+        engine.serve([Request(rid + i, h, 2) for i, h in enumerate(hot)])
+        rid += len(hot)
+    fleet = engine.fleet
+    assert engine.cache is None and fleet is not None
+    assert sum(n.cache.hits + n.cache.misses for n in fleet.nodes) >= 9
+    audits = engine.audit()
+    assert set(audits) == {n.host for n in fleet.nodes}
+    # realized fleet bill == fsum of per-host audits, bit-for-bit
+    observed = math.fsum(a.observed_dollars for a in audits.values()
+                         if a is not None)
+    assert fleet.dollars() == observed
+    snap = engine.governance_snapshot()
+    assert snap["fleet"]["n_nodes"] == 3
+    assert snap["fleet"]["dollars"] == fleet.dollars()
