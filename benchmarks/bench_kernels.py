@@ -38,6 +38,17 @@ def main():
     occ_r = np.cumsum(np.asarray(deltas))
     emit("kernel_interval_occupancy_100k", dt_o,
          f"allclose={bool(np.allclose(occ_k, occ_r, rtol=1e-5, atol=1e-3))}")
+
+    # occupancy + worst excess over zcap in one pass (cost_foo validate=True)
+    zcap = jnp.asarray(rng.integers(0, 6, 100_000).astype(np.float32))
+    (occ_f, ex_f), dt_f = timed(
+        lambda: ops.occupancy_feasible(deltas, zcap, block_t=8192), repeats=1)
+    occ_w, ex_w = ref.occupancy_feasible_ref(deltas, zcap)
+    ok = (np.allclose(np.asarray(occ_f), np.asarray(occ_w), rtol=1e-5,
+                      atol=1e-3)
+          and abs(float(ex_f) - float(ex_w)) < 1e-3)
+    emit("kernel_occupancy_feasible_100k", dt_f,
+         f"match={ok};excess={float(ex_f):.1f}")
     return None
 
 

@@ -6,10 +6,12 @@ from .pricing import (PRICE_VECTORS, PriceVector, crossover_bytes,
 from .trace import (Trace, next_use_indices, twemcache_like, two_class_trace,
                     wiki_cdn_like, zipf_trace)
 from .policies import POLICIES, PolicyResult, simulate, total_cost_no_cache
-from .opt_exact import (OptResult, SweepResult, build_intervals,
-                        dp_opt_uniform, enumerate_opt_uniform,
-                        exact_opt_uniform, exact_opt_uniform_sweep, lp_opt)
-from .cost_foo import CostFooResult, cost_foo
+from .opt_exact import (OptResult, SweepResult, build_interval_arrays,
+                        build_intervals, dp_opt_uniform, enumerate_opt_uniform,
+                        exact_opt_uniform, exact_opt_uniform_sweep,
+                        interval_deltas, lp_opt, zcap_profile)
+from .cost_foo import (CostFooResult, cost_foo, round_fractional,
+                       round_fractional_reference)
 from .regret import regret, regret_table
 
 __all__ = [
@@ -17,7 +19,9 @@ __all__ = [
     "miss_costs", "Trace", "next_use_indices", "twemcache_like",
     "two_class_trace", "wiki_cdn_like", "zipf_trace", "POLICIES",
     "PolicyResult", "simulate", "total_cost_no_cache", "OptResult",
-    "SweepResult", "build_intervals", "dp_opt_uniform",
-    "enumerate_opt_uniform", "exact_opt_uniform", "exact_opt_uniform_sweep",
-    "lp_opt", "CostFooResult", "cost_foo", "regret", "regret_table",
+    "SweepResult", "build_interval_arrays", "build_intervals",
+    "dp_opt_uniform", "enumerate_opt_uniform", "exact_opt_uniform",
+    "exact_opt_uniform_sweep", "interval_deltas", "lp_opt", "zcap_profile",
+    "CostFooResult", "cost_foo", "round_fractional",
+    "round_fractional_reference", "regret", "regret_table",
 ]

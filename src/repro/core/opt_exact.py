@@ -40,11 +40,15 @@ from .trace import next_use_indices
 __all__ = [
     "Interval",
     "build_intervals",
+    "build_interval_arrays",
+    "interval_deltas",
+    "zcap_profile",
     "OptResult",
     "SweepResult",
     "exact_opt_uniform",
     "exact_opt_uniform_sweep",
     "lp_opt",
+    "lp_solve_arrays",
     "dp_opt_uniform",
     "enumerate_opt_uniform",
 ]
@@ -59,19 +63,71 @@ class Interval:
     size: float  # bytes occupied while retained
 
 
-def build_intervals(ids: np.ndarray, costs: np.ndarray,
-                    sizes: np.ndarray) -> list[Interval]:
-    """All reuse gaps (t, next(t)) with next(t) < T."""
+def build_interval_arrays(ids: np.ndarray, costs: np.ndarray,
+                          sizes: np.ndarray):
+    """Vectorized reuse-gap extraction: flat (t, u, obj, save, size) arrays.
+
+    The array form of `build_intervals` — shared by the LP's difference-form
+    matrix construction, the epoch decomposition in `cost_foo`, and
+    `interval_deltas` (the occupancy kernel's input). One `next_use_indices`
+    pass plus boolean masks instead of a Python loop over T.
+    """
     ids = np.asarray(ids)
     nxt = next_use_indices(ids)
     T = len(ids)
-    out = []
-    for t in range(T):
-        u = int(nxt[t])
-        if u < T:
-            i = int(ids[t])
-            out.append(Interval(t, u, i, float(costs[i]), float(sizes[i])))
-    return out
+    keep = nxt < T
+    t = np.flatnonzero(keep).astype(np.int64)
+    u = nxt[keep].astype(np.int64)
+    obj = ids[keep].astype(np.int64)
+    save = np.asarray(costs, np.float64)[obj]
+    size = np.asarray(sizes, np.float64)[obj]
+    return t, u, obj, save, size
+
+
+def build_intervals(ids: np.ndarray, costs: np.ndarray,
+                    sizes: np.ndarray) -> list[Interval]:
+    """All reuse gaps (t, next(t)) with next(t) < T."""
+    t, u, obj, save, size = build_interval_arrays(ids, costs, sizes)
+    return [Interval(a, b, o, sv, sz)
+            for a, b, o, sv, sz in zip(t.tolist(), u.tolist(), obj.tolist(),
+                                       save.tolist(), size.tolist())]
+
+
+def interval_deltas(t: np.ndarray, u: np.ndarray, size: np.ndarray,
+                    T: int) -> np.ndarray:
+    """Per-instant occupancy deltas of a retention schedule.
+
+    Interval (t, u) occupies serving instants t+1..u-1, so it contributes
+    +size at index t+1 and -size at index u; the prefix sum of the result
+    is eq. (2)'s LHS occupancy profile — feed it to
+    `kernels.interval_occupancy` / `kernels.occupancy_feasible`.
+    """
+    d = np.zeros(int(T), np.float64)
+    t = np.asarray(t, np.int64)
+    u = np.asarray(u, np.int64)
+    size = np.asarray(size, np.float64)
+    starts = t + 1
+    sm = starts < T
+    np.add.at(d, starts[sm], size[sm])
+    em = u < T
+    np.add.at(d, u[em], -size[em])
+    return d
+
+
+def zcap_profile(ids: np.ndarray, sizes: np.ndarray, B: float) -> np.ndarray:
+    """Occupancy cap per serving instant (eq. 2's RHS), vectorized.
+
+    zcap[tau] = B - s_{o(tau)} while the served object fits, else B
+    (fetch-through: an over-budget object never occupies the cache).
+    Index 0 is a placeholder set to B — there is no constraint before the
+    first request.
+    """
+    ids = np.asarray(ids)
+    s_at = np.asarray(sizes, np.float64)[ids]
+    zcap = np.where(s_at <= B, B - s_at, float(B))
+    if len(zcap):
+        zcap[0] = float(B)
+    return zcap
 
 
 @dataclasses.dataclass
@@ -363,6 +419,48 @@ def exact_opt_uniform_sweep(ids: np.ndarray, costs: np.ndarray,
 # sparse interval LP (difference form) — uniform exact / variable fractional
 # ---------------------------------------------------------------------------
 
+def lp_solve_arrays(pt: np.ndarray, pu: np.ndarray, psave: np.ndarray,
+                    psize: np.ndarray, zcap: np.ndarray, nz: int):
+    """Difference-form interval LP (eq. 2's relaxation) over local instants.
+
+    The array core behind `lp_opt` and `cost_foo`'s epoch decomposition:
+    interval j occupies instants pt[j]+1..pu[j]-1 (1-based local instants,
+    so 0 <= pt[j] and pu[j]-1 <= nz); zcap[k] caps occupancy at instant
+    k+1 (length nz). Matrix construction is fully vectorized — 2 nonzeros
+    per variable, assembled with numpy concatenates instead of per-row
+    Python appends. Returns (savings_upper_bound, x_fractional).
+    """
+    from scipy import sparse
+    from scipy.optimize import linprog
+
+    m = len(pt)
+    if m == 0 or nz <= 0:
+        return 0.0, np.zeros(0)
+    # conditioning: cloud miss costs are ~1e-8 $ (below HiGHS's default
+    # tolerances) and sizes span bytes..GB — normalize both scales
+    save_scale = float(psave.mean()) or 1.0
+    size_scale = float(psize.mean()) or 1.0
+    sz = psize / size_scale
+    taus = np.arange(1, nz + 1, dtype=np.int64)
+    # z coefficients: z_tau is +1 in row tau-1, -1 in row tau (tau <= nz-1);
+    # x coefficients: -size in row t (starts occupying at instant t+1),
+    # +size in row u-1 when it stops occupying inside the horizon
+    ends = pu <= nz
+    rows = np.concatenate([taus - 1, taus[:nz - 1],
+                           pt, pu[ends] - 1])
+    cols = np.concatenate([m + taus - 1, m + taus[:nz - 1] - 1,
+                           np.arange(m, dtype=np.int64), np.flatnonzero(ends)])
+    vals = np.concatenate([np.ones(nz), -np.ones(nz - 1), -sz, sz[ends]])
+    A = sparse.csc_matrix((vals, (rows, cols)), shape=(nz, m + nz))
+    c = np.concatenate([-psave / save_scale, np.zeros(nz)])
+    zc = zcap / size_scale
+    bounds = [(0.0, 1.0)] * m + list(zip(np.zeros(nz), zc))
+    res = linprog(c, A_eq=A, b_eq=np.zeros(nz), bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"LP failed: {res.message}")
+    return float(-res.fun) * save_scale, res.x[:m]
+
+
 def lp_opt(ids: np.ndarray, costs: np.ndarray, sizes: np.ndarray, B: float):
     """Interval LP (eq. 2) in an O(T + m)-nonzero difference form via HiGHS.
 
@@ -376,47 +474,26 @@ def lp_opt(ids: np.ndarray, costs: np.ndarray, sizes: np.ndarray, B: float):
         0 <= z_tau <= B - s_{o(tau)}   (B if s_{o(tau)} > B: fetch-through)
     which has 2 nonzeros per x and per z instead of one per covered instant.
     """
-    from scipy import sparse
-    from scipy.optimize import linprog
-
     ids = np.asarray(ids)
     T = len(ids)
-    total = float(costs[ids].sum())
-    intervals = build_intervals(ids, costs, sizes)
-    free_save = sum(iv.save for iv in intervals
-                    if iv.u == iv.t + 1 and iv.size <= B)
-    paid = [iv for iv in intervals if iv.u > iv.t + 1 and iv.size <= B]
-    m = len(paid)
-    nz = T - 1  # number of occupancy variables z_1..z_{T-1}
-    if m == 0 or nz <= 0:
+    costs = np.asarray(costs, np.float64)
+    total = float(costs[ids].sum()) if T else 0.0
+    t, u, obj, save, size = build_interval_arrays(ids, costs, sizes)
+    fits = size <= B
+    free_save = float(save[fits & (u == t + 1)].sum())
+    paidm = fits & (u > t + 1)
+    pt, pu = t[paidm], u[paidm]
+    ps, pz = save[paidm], size[paidm]
+    paid = [Interval(a, b, o, sv, szv)
+            for a, b, o, sv, szv in zip(pt.tolist(), pu.tolist(),
+                                        obj[paidm].tolist(), ps.tolist(),
+                                        pz.tolist())]
+    nz = T - 1
+    if len(paid) == 0 or nz <= 0:
         return total - free_save, free_save, np.zeros(0), paid
-    # conditioning: cloud miss costs are ~1e-8 $ (below HiGHS's default
-    # tolerances) and sizes span bytes..GB — normalize both scales
-    save_scale = float(np.mean([iv.save for iv in paid])) or 1.0
-    size_scale = float(np.mean([iv.size for iv in paid])) or 1.0
-    rows, cols, vals = [], [], []
-    # z coefficients: +1 in row tau, -1 in row tau+1  (rows are 0-indexed tau-1)
-    for tau in range(1, T):      # tau = 1..T-1 ; row index tau-1
-        rows.append(tau - 1); cols.append(m + tau - 1); vals.append(1.0)
-        if tau + 1 <= T - 1:
-            rows.append(tau); cols.append(m + tau - 1); vals.append(-1.0)
-    # x coefficients: interval occupies instants t+1..u-1
-    for j, iv in enumerate(paid):
-        rows.append(iv.t + 1 - 1); cols.append(j); vals.append(-iv.size / size_scale)
-        if iv.u <= T - 1:        # stops occupying at instant u
-            rows.append(iv.u - 1); cols.append(j); vals.append(iv.size / size_scale)
-    A = sparse.csc_matrix((vals, (rows, cols)), shape=(nz, m + nz))
-    b_eq = np.zeros(nz)
-    c = np.concatenate([-np.array([iv.save / save_scale for iv in paid]),
-                        np.zeros(nz)])
-    zcap = np.array([max(B - sizes[ids[tau]], 0.0) if sizes[ids[tau]] <= B else B
-                     for tau in range(1, T)]) / size_scale
-    bounds = [(0.0, 1.0)] * m + [(0.0, float(zc)) for zc in zcap]
-    res = linprog(c, A_eq=A, b_eq=b_eq, bounds=bounds, method="highs")
-    if not res.success:
-        raise RuntimeError(f"LP failed: {res.message}")
-    x = res.x[:m]
-    savings = float(-res.fun) * save_scale + free_save
+    zcap = zcap_profile(ids, sizes, B)[1:]
+    savings, x = lp_solve_arrays(pt, pu, ps, pz, zcap, nz)
+    savings += free_save
     return total - savings, savings, x, paid
 
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked prefix-sum of occupancy deltas (eq. 2 LHS).
+"""Pallas TPU kernels: blocked occupancy scan + feasibility (eq. 2 LHS).
 
 Feasibility checking / contention profiling of a retention schedule needs
 the occupancy profile occ(p) = sum of sizes of intervals covering serving
@@ -6,6 +6,14 @@ instant p. With per-position deltas (+s_i at interval start, -s_i one past
 its end) this is a prefix sum over the request timeline — on TPU a
 sequential-grid blocked scan: each grid step cumsums its VMEM block and
 adds the running total carried in SMEM scratch.
+
+`occupancy_feasible_pallas` fuses the feasibility verdict into the same
+scan: the deltas ARE the range-adds of the rounding pass's accepted
+intervals, and the kernel carries a running max of occ - zcap alongside
+the prefix-sum carry, so "does the schedule ever exceed the cap" is one
+device-resident pass instead of a host round-trip per interval
+(DESIGN.md §4; dispatched behind `use_pallas`/`on_tpu()` like
+`evict_argmin`).
 """
 from __future__ import annotations
 
@@ -16,7 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["interval_occupancy_pallas"]
+__all__ = ["interval_occupancy_pallas", "occupancy_feasible_pallas"]
+
+_NEG_BIG = -3.4e38
+
+# jax >= 0.5 renamed pltpu.TPUMemorySpace -> pltpu.MemorySpace; the SMEM
+# constant exists under both spellings.
+_SMEM = getattr(pltpu, "MemorySpace", getattr(pltpu, "TPUMemorySpace", None)).SMEM
 
 
 def _kernel(deltas_ref, out_ref, carry_ref, *, block_t: int):
@@ -51,3 +65,56 @@ def interval_occupancy_pallas(deltas: jax.Array, block_t: int = 2048,
         interpret=interpret,
     )(deltas)
     return out[:T]
+
+
+def _feas_kernel(deltas_ref, zcap_ref, occ_ref, excess_ref, carry_ref, *,
+                 num_blocks: int):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        carry_ref[0] = jnp.float32(0.0)       # running occupancy
+        carry_ref[1] = jnp.float32(_NEG_BIG)  # running max of occ - zcap
+
+    block = deltas_ref[...].astype(jnp.float32)
+    scanned = jnp.cumsum(block) + carry_ref[0]
+    occ_ref[...] = scanned
+    carry_ref[0] = scanned[-1]
+    carry_ref[1] = jnp.maximum(
+        carry_ref[1], jnp.max(scanned - zcap_ref[...].astype(jnp.float32)))
+
+    @pl.when(g == num_blocks - 1)
+    def _emit():
+        excess_ref[0] = carry_ref[1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def occupancy_feasible_pallas(deltas: jax.Array, zcap: jax.Array,
+                              block_t: int = 2048,
+                              interpret: bool = True):
+    """Blocked range-add scan + running-max feasibility in one pass.
+
+    deltas: (T,) schedule range-adds in delta form; zcap: (T,) per-instant
+    caps. Returns (occupancy (T,) float32, max excess occ - zcap, a float32
+    scalar — feasible iff <= tolerance). Padding positions carry zcap =
+    +big so they never win the max.
+    """
+    T = deltas.shape[0]
+    num_blocks = -(-T // block_t)
+    Tpad = num_blocks * block_t
+    if Tpad != T:
+        deltas = jnp.pad(deltas, (0, Tpad - T))
+        zcap = jnp.pad(zcap, (0, Tpad - T), constant_values=-_NEG_BIG)
+    occ, excess = pl.pallas_call(
+        functools.partial(_feas_kernel, num_blocks=num_blocks),
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((block_t,), lambda g: (g,)),
+                  pl.BlockSpec((block_t,), lambda g: (g,))],
+        out_specs=[pl.BlockSpec((block_t,), lambda g: (g,)),
+                   pl.BlockSpec(memory_space=_SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((Tpad,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(deltas, zcap)
+    return occ[:T], excess[0]

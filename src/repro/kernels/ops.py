@@ -12,10 +12,12 @@ import jax.numpy as jnp
 
 from . import ref
 from .evict_argmin import evict_argmin_pallas
-from .interval_occupancy import interval_occupancy_pallas
+from .interval_occupancy import (interval_occupancy_pallas,
+                                 occupancy_feasible_pallas)
 from .next_use import next_use_pallas
 
-__all__ = ["next_use", "evict_argmin", "interval_occupancy", "on_tpu"]
+__all__ = ["next_use", "evict_argmin", "interval_occupancy",
+           "occupancy_feasible", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -53,3 +55,19 @@ def interval_occupancy(deltas: jax.Array, *, block_t: int = 2048,
         return interval_occupancy_pallas(deltas, block_t=block_t,
                                          interpret=not on_tpu())
     return ref.interval_occupancy_ref(deltas)
+
+
+def occupancy_feasible(deltas: jax.Array, zcap: jax.Array, *,
+                       block_t: int = 2048, use_pallas: bool | None = None):
+    """Schedule feasibility: (occupancy profile, max excess over zcap).
+
+    The device-resident check of cost-FOO's rounded schedule
+    (DESIGN.md §4): deltas are the accepted intervals' range-adds, the
+    fused scan carries occupancy + running max(occ - zcap) in SMEM.
+    """
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return occupancy_feasible_pallas(deltas, zcap, block_t=block_t,
+                                         interpret=not on_tpu())
+    return ref.occupancy_feasible_ref(deltas, zcap)

@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["next_use_ref", "evict_argmin_ref", "interval_occupancy_ref"]
+__all__ = ["next_use_ref", "evict_argmin_ref", "interval_occupancy_ref",
+           "occupancy_feasible_ref"]
 
 
 def next_use_ref(ids: jax.Array, num_objects: int) -> jax.Array:
@@ -53,3 +54,15 @@ def interval_occupancy_ref(deltas: jax.Array) -> jax.Array:
     ends; the prefix sum is the LHS occupancy profile of eq. (2).
     """
     return jnp.cumsum(deltas, axis=0)
+
+
+def occupancy_feasible_ref(deltas: jax.Array,
+                           zcap: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Occupancy profile + worst excess over the per-instant cap.
+
+    Returns (occ float32, max over tau of occ[tau] - zcap[tau]); the
+    schedule is feasible iff the excess is <= tolerance. Semantics of the
+    fused Pallas scan in interval_occupancy.py.
+    """
+    occ = jnp.cumsum(deltas.astype(jnp.float32), axis=0)
+    return occ, jnp.max(occ - zcap.astype(jnp.float32))

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -76,6 +77,7 @@ class WindowAudit:
     dollar_regret: float         # vs the lower bound (conservative)
     uniform: bool
     opt_by_budget: Optional[dict[int, float]] = None  # uniform + grid only
+    audit_seconds: float = 0.0   # wall time of the exact solve itself
 
     def summary(self) -> str:
         return (f"[window audit] T={self.requests} "
@@ -99,13 +101,21 @@ class WindowedAuditor:
     def __init__(self, capacity_bytes: float, window: int = 2048,
                  budget_grid=None, metrics=None,
                  series_name: str = "online.window_regret",
-                 max_skew: Optional[float] = None):
+                 max_skew: Optional[float] = None,
+                 foo_epoch_len: Optional[int] = None,
+                 foo_policies: Optional[tuple[str, ...]] = None):
         self.capacity = float(capacity_bytes)
         self.window = int(window)
         self.budget_grid = (None if budget_grid is None
                             else np.asarray(budget_grid, np.int64))
         self.metrics = metrics
         self.series_name = series_name
+        # variable-size audit path (DESIGN.md §4): epoch decomposition +
+        # segment-tree rounding keep the cost-FOO bracket inside a window
+        # interval even at large `window`; `foo_epoch_len=None` lets
+        # cost_foo pick (monolithic up to 25k requests)
+        self.foo_epoch_len = foo_epoch_len
+        self.foo_policies = foo_policies
         self.watermark = Watermark(float(self.window)
                                    if max_skew is None else max_skew)
         # sorted by (event_time, arrival seq): (t, seq, key, nbytes, mc, hit)
@@ -153,6 +163,7 @@ class WindowedAuditor:
         costs_arr = np.asarray(costs)
         uniform = len(set(sizes_arr.tolist())) == 1
         opt_by_budget = None
+        t_solve = time.perf_counter()
         if uniform:
             B = max(1, int(self.capacity // sizes_arr[0]))
             grid = (np.unique(np.append(self.budget_grid, B))
@@ -173,13 +184,27 @@ class WindowedAuditor:
                                  sweep.profile["budgets_answered"])
         else:
             tr = Trace(ids=ids, sizes=sizes_arr, name="window_audit")
-            r = cost_foo(tr, costs_arr, self.capacity)
+            kwargs = {}
+            if self.foo_policies is not None:
+                kwargs["policies"] = self.foo_policies
+            r = cost_foo(tr, costs_arr, self.capacity,
+                         epoch_len=self.foo_epoch_len, **kwargs)
             lower, upper = r.lower, r.upper
+            if self.metrics is not None and r.profile:
+                # solver profiling (DESIGN.md §9): how the bracket was made
+                self.metrics.inc("solver.costfoo.runs")
+                self.metrics.inc("solver.costfoo.epochs",
+                                 r.profile.get("epochs", 1))
+                self.metrics.inc("solver.costfoo.crossing_intervals",
+                                 r.profile.get("crossing_intervals", 0))
+        audit_seconds = time.perf_counter() - t_solve
         # observed >= lower mathematically; clip float jitter at exactly-OPT
         reg = max(0.0, (observed - lower) / max(lower, 1e-12))
         self.audits += 1
         if self.metrics is not None:
             self.metrics.observe(self.series_name, reg, step=self._seen)
+            self.metrics.observe("online.audit_seconds", audit_seconds,
+                                 step=self._seen)
             oh = getattr(self.metrics, "observe_hist", None)
             if oh is not None:   # windowed-regret histogram (DESIGN.md §9)
                 oh(self.series_name + "_hist", reg,
@@ -187,4 +212,5 @@ class WindowedAuditor:
         return WindowAudit(requests=len(buf), observed_dollars=observed,
                            opt_dollars_lower=lower, opt_dollars_upper=upper,
                            dollar_regret=reg, uniform=uniform,
-                           opt_by_budget=opt_by_budget)
+                           opt_by_budget=opt_by_budget,
+                           audit_seconds=audit_seconds)

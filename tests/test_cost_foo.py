@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import (PRICE_VECTORS, Trace, cost_foo, exact_opt_uniform,
-                        lp_opt, miss_costs, zipf_trace)
+                        lp_opt, miss_costs, round_fractional,
+                        round_fractional_reference, zipf_trace)
 
 
 def test_lower_bound_below_feasible_upper():
@@ -47,3 +48,61 @@ def test_fractional_lower_bound_below_uniform_opt():
     lo, _, x, _ = lp_opt(ids, costs, np.ones(25), 6.0)
     exact = exact_opt_uniform(ids, costs, 6).dollars
     assert lo == pytest.approx(exact, rel=1e-6)
+
+
+def test_segment_tree_rounding_matches_reference_fixed_seeds():
+    """Fast rounding == quadratic oracle on real lognormal-size traces."""
+    for seed in range(4):
+        tr = zipf_trace(n_objects=60, n_requests=900, sigma=1.4,
+                        mean_size=48 * 1024, seed=seed)
+        costs = miss_costs(tr.sizes, PRICE_VECTORS["s3_internet"])
+        B = float(np.quantile(tr.sizes, 0.8) * 18)
+        _, _, x, paid = lp_opt(tr.ids, costs, tr.sizes, B)
+        fast = round_fractional(tr.ids, tr.sizes, B, x, paid)
+        ref = round_fractional_reference(tr.ids, tr.sizes, B, x, paid)
+        assert fast == ref  # bit-identical, not approx
+
+
+def test_epoch_decomposition_brackets_monolithic():
+    """Forced small epochs must keep a valid bracket: the decomposed lower
+    bound never exceeds the monolithic LP's (it is a relaxation of it) and
+    the rounded upper stays feasible-above-lower."""
+    tr = zipf_trace(n_objects=120, n_requests=6000, sigma=1.2,
+                    mean_size=32 * 1024, seed=11)
+    costs = miss_costs(tr.sizes, PRICE_VECTORS["gcs_internet"])
+    B = float(np.quantile(tr.sizes, 0.8) * 30)
+    mono = cost_foo(tr, costs, B, policies=("gdsf",))
+    dec = cost_foo(tr, costs, B, policies=("gdsf",), epoch_len=1500,
+                   epoch_overlap=0.5)
+    assert mono.profile["epochs"] == 1
+    assert dec.profile["epochs"] > 1
+    assert dec.lower <= mono.lower + 1e-9 * max(1.0, mono.lower)
+    assert dec.lower <= dec.upper + 1e-9
+    # still a usable bound: decomposition gives up a bounded amount here
+    assert dec.lower >= 0.5 * mono.lower
+
+
+def test_epoch_len_covering_trace_is_monolithic():
+    """epoch_len >= T must reproduce the monolithic bracket exactly —
+    same code path, bit-for-bit."""
+    tr = zipf_trace(n_objects=50, n_requests=1200, mean_size=16 * 1024,
+                    seed=7)
+    costs = miss_costs(tr.sizes, PRICE_VECTORS["s3_internet"])
+    B = float(np.quantile(tr.sizes, 0.8) * 15)
+    auto = cost_foo(tr, costs, B, policies=("gdsf",))
+    forced = cost_foo(tr, costs, B, policies=("gdsf",),
+                      epoch_len=len(tr.ids) + 100)
+    assert forced.lower == auto.lower
+    assert forced.upper == auto.upper
+
+
+def test_validate_kernel_checks_rounded_schedule():
+    """validate=True replays the accepted schedule through the Pallas
+    occupancy_feasible kernel; any infeasibility would assert inside."""
+    tr = zipf_trace(n_objects=40, n_requests=800, mean_size=24 * 1024,
+                    seed=5)
+    costs = miss_costs(tr.sizes, PRICE_VECTORS["s3_internet"])
+    B = float(np.quantile(tr.sizes, 0.8) * 12)
+    r = cost_foo(tr, costs, B, policies=("gdsf",), validate=True)
+    assert r.lower <= r.upper + 1e-9
+    assert r.profile["rounded_intervals"] >= 0

@@ -72,6 +72,37 @@ def test_interval_occupancy_shapes(T, block_t, dtype):
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
 
 
+@pytest.mark.parametrize("T,block_t,dtype", [
+    (100, 32, jnp.float32), (4096, 1024, jnp.float32),
+    (777, 256, jnp.float32), (2000, 512, jnp.int32), (1, 8, jnp.float32),
+    (2049, 2048, jnp.float32),
+])
+def test_occupancy_feasible_shapes(T, block_t, dtype):
+    rng = np.random.default_rng(T * 7 + 1)
+    deltas = rng.integers(-3, 4, T).astype(np.float32)
+    zcap = rng.integers(0, 8, T).astype(np.float32)
+    got_occ, got_ex = ops.occupancy_feasible(
+        jnp.asarray(deltas).astype(dtype), jnp.asarray(zcap),
+        block_t=block_t)
+    want_occ, want_ex = ref.occupancy_feasible_ref(
+        jnp.asarray(deltas).astype(dtype), jnp.asarray(zcap))
+    np.testing.assert_allclose(np.asarray(got_occ), np.asarray(want_occ),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(float(got_ex), float(want_ex),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_occupancy_feasible_sign():
+    """excess <= 0 iff the schedule fits under zcap at every instant."""
+    deltas = jnp.asarray(np.array([2.0, 1.0, -1.0, 3.0], np.float32))
+    zcap_ok = jnp.asarray(np.array([5.0, 5.0, 5.0, 5.0], np.float32))
+    zcap_bad = jnp.asarray(np.array([5.0, 5.0, 5.0, 4.0], np.float32))
+    _, ex_ok = ops.occupancy_feasible(deltas, zcap_ok, block_t=2)
+    _, ex_bad = ops.occupancy_feasible(deltas, zcap_bad, block_t=2)
+    assert float(ex_ok) <= 0.0       # occ = [2,3,2,5] fits under 5
+    assert float(ex_bad) == 1.0      # final instant: 5 vs cap 4
+
+
 def test_occupancy_of_opt_schedule_respects_budget():
     """End-to-end: the exact optimum's schedule through the kernel is
     feasible at every serving instant."""
